@@ -1,0 +1,44 @@
+"""Beyond-paper ablations: what each scheduler ingredient buys.
+
+1. headroom sweep — burst margin vs claimed throughput vs violations;
+2. the >85%-utilization partition bump (EXPERIMENTS.md §Paper-validation);
+3. prospective-interference slack (the gpulet+int conservatism mechanism).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, setup, timed
+from repro.core import ElasticPartitioning
+from repro.core.scenarios import REQUEST_SCENARIOS
+from repro.simulator import PoissonArrivals, SimConfig, simulate_schedule
+from repro.simulator.events import merge_sorted
+
+
+def _measure(sched, profs, rates, horizon=12_000.0):
+    lam = sched.max_scale(rates)
+    use = {m: r * lam * 0.999 for m, r in rates.items() if r > 0}
+    res = sched.schedule(use)
+    gen = PoissonArrivals(seed=9)
+    reqs = merge_sorted([gen.constant(m, r, profs[m].slo_ms, horizon)
+                         for m, r in use.items()])
+    met = simulate_schedule(res, profs, reqs, SimConfig(horizon_ms=horizon))
+    return sum(use.values()), met.violation_rate
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, intf, _ = setup()
+    rates = REQUEST_SCENARIOS["equal"]
+    rows = []
+    for headroom in ((0.9, 0.8, 0.7) if not fast else (0.8,)):
+        sched = ElasticPartitioning(profs, intf_model=intf,
+                                    headroom=headroom)
+        (rate, viol), us = timed(_measure, sched, profs, rates)
+        rows.append(Row(f"ablation/headroom={headroom}", us,
+                        f"claimed={rate:.0f}/s violations={100*viol:.2f}% "
+                        f"(burst margin vs throughput trade)"))
+    # prospective slack off = plain gpulet (already in fig12/13); here the
+    # marginal effect of interference *revalidation* alone:
+    sched = ElasticPartitioning(profs, intf_model=intf)
+    (rate, viol), us = timed(_measure, sched, profs, rates)
+    rows.append(Row("ablation/gpulet+int_reference", us,
+                    f"claimed={rate:.0f}/s violations={100*viol:.2f}%"))
+    return rows

@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: calibrated profiles, schedulers, timing."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import (ElasticPartitioning, GuidedSelfTuning,
+                        SquishyBinPacking, calibrate_profiles,
+                        fit_default_model)
+
+
+@functools.lru_cache(maxsize=1)
+def setup():
+    profs_t = calibrate_profiles()
+    intf, intf_stats = fit_default_model(profs_t)
+    return profs_t, intf, intf_stats
+
+
+def make_schedulers(profiles, intf):
+    return {
+        "sbp": SquishyBinPacking(profiles),
+        "self-tuning": GuidedSelfTuning(profiles),
+        "gpulet": ElasticPartitioning(profiles),
+        "gpulet+int": ElasticPartitioning(profiles, intf_model=intf),
+    }
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+class Row:
+    """One CSV row: name, us_per_call, derived."""
+
+    def __init__(self, name: str, us: float, derived: str):
+        self.name, self.us, self.derived = name, us, derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"

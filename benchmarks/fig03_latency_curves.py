@@ -1,0 +1,28 @@
+"""Fig. 3: batch latency vs. partition size — flat for small b, steep for 32."""
+from __future__ import annotations
+
+from benchmarks.common import Row, setup, timed
+from repro.core.latency import AnalyticGPULatency, PARTITION_SIZES
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, _, _ = setup()
+    lat = AnalyticGPULatency()
+    rows = []
+    for name in ("goo", "res", "ssd", "vgg"):
+        prof = profs[name]
+
+        def curve():
+            return {b: [lat.latency_ms(prof, b, s / 100)
+                        for s in PARTITION_SIZES] for b in (1, 8, 32)}
+
+        c, us = timed(curve)
+        # knee check: latency ratio L(20%)/L(100%) small for b=1, large b=32
+        r1 = c[1][0] / c[1][-1]
+        r32 = c[32][0] / c[32][-1]
+        knee = lat.max_efficient_partition(prof)
+        rows.append(Row(
+            f"fig03/{name}", us,
+            f"L20/L100[b=1]={r1:.2f} L20/L100[b=32]={r32:.2f} knee={knee}% "
+            f"flat_small_batch={'yes' if r1 < r32 / 1.5 else 'no'}"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 4: schedulable scenarios (of 1023) without vs. with GPU partitioning."""
+from __future__ import annotations
+
+from benchmarks.common import Row, setup, timed
+from repro.core import SquishyBinPacking
+from repro.core.scenarios import schedulability_population
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, _, _ = setup()
+    pop = schedulability_population()
+    if fast:
+        pop = pop[::8]
+    rows = []
+    for name, sched in (
+        ("sbp_no_partition", SquishyBinPacking(profs)),
+        ("sbp_even_split", SquishyBinPacking(profs, split_even=True)),
+    ):
+        count, us = timed(
+            lambda s=sched: sum(1 for r in pop if s.is_schedulable(r)))
+        rows.append(Row(f"fig04/{name}", us,
+                        f"schedulable={count}/{len(pop)}"))
+    return rows

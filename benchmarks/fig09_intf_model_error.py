@@ -1,0 +1,18 @@
+"""Fig. 9: linear interference-model prediction error CDF.
+
+Paper: 90% of cases within 10.26% error, 95% within 13.98%.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, setup, timed
+from repro.core import fit_default_model
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, _, _ = setup()
+    (_, stats), us = timed(fit_default_model, profs)
+    return [Row("fig09/intf_model_error", us,
+                f"train={stats['n_train']} val={stats['n_val']} "
+                f"p90_err={stats['p90_rel_err']:.4f} (paper 0.1026) "
+                f"p95_err={stats['p95_rel_err']:.4f} (paper 0.1398) "
+                f"mean={stats['mean_rel_err']:.4f}")]

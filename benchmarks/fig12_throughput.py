@@ -1,0 +1,47 @@
+"""Fig. 12: max achievable throughput per scheduler per scenario.
+
+Paper: gpulet+int averages +102.6% vs SBP and +74.8% vs guided self-tuning;
+gpulet is ~3.4% above gpulet+int (no interference conservatism).
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Row, make_schedulers, setup, timed
+from repro.core import ElasticPartitioning, GuidedSelfTuning, SquishyBinPacking
+from repro.core.scenarios import APPLICATIONS, REQUEST_SCENARIOS
+
+
+def throughput_table(profs, intf):
+    rows = {}
+    for sc, rates in REQUEST_SCENARIOS.items():
+        scheds = make_schedulers(profs, intf)
+        rows[sc] = {name: s.max_scale(rates) * sum(rates.values())
+                    for name, s in scheds.items()}
+    for app_name, app in APPLICATIONS.items():
+        aprofs = app.profiles(profs)
+        scheds = make_schedulers(aprofs, intf)
+        rows[app_name] = {
+            name: s.max_scale(app.stream_rates(1.0), hi=8192) * app.n_inferences
+            for name, s in scheds.items()}
+    return rows
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, intf, _ = setup()
+    table, us = timed(throughput_table, profs, intf)
+    out = []
+    g_sbp, g_st, g_noint = [], [], []
+    for sc, row in table.items():
+        out.append(Row(
+            f"fig12/{sc}", us / len(table),
+            "  ".join(f"{k}={v:.0f}" for k, v in row.items())))
+        g_sbp.append(row["gpulet+int"] / row["sbp"] - 1)
+        g_st.append(row["gpulet+int"] / row["self-tuning"] - 1)
+        g_noint.append(row["gpulet"] / row["gpulet+int"] - 1)
+    out.append(Row(
+        "fig12/avg_gains", 0.0,
+        f"vs_sbp={100*statistics.mean(g_sbp):.1f}% (paper 102.6) "
+        f"vs_selftuning={100*statistics.mean(g_st):.1f}% (paper 74.8) "
+        f"gpulet_vs_int={100*statistics.mean(g_noint):.1f}% (paper 3.4)"))
+    return out

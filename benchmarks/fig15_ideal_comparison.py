@@ -1,0 +1,61 @@
+"""Fig. 15/16: elastic partitioning vs. the exhaustive ideal scheduler.
+
+Paper: gpulet+int schedules 18 fewer of 1023 scenarios (1.8%) and reaches an
+average 92.3% of the ideal max schedulable rate.
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Row, setup, timed
+from repro.core import ElasticPartitioning, IdealScheduler
+from repro.core.scenarios import APPLICATIONS, REQUEST_SCENARIOS, \
+    schedulability_population
+
+
+def run(fast: bool = False) -> list[Row]:
+    profs, intf, _ = setup()
+    ours = ElasticPartitioning(profs, intf_model=intf)
+    ideal = IdealScheduler(profs, intf_model=intf)
+    pop = schedulability_population()
+    pop = pop[::16] if fast else pop[::4]  # ideal is exhaustive: subsample
+
+    def count(s):
+        return sum(1 for r in pop if s.is_schedulable(r))
+
+    n_ours, us1 = timed(count, ours)
+    n_ideal, us2 = timed(count, ideal)
+    rows = [Row("fig15/schedulability", us1 + us2,
+                f"gpulet+int={n_ours}/{len(pop)} ideal={n_ideal}/{len(pop)} "
+                f"gap={n_ideal - n_ours} "
+                f"({100*(n_ideal-n_ours)/len(pop):.1f}%, paper 1.8%)")]
+
+    ratios = []
+    scenarios = list(REQUEST_SCENARIOS.items())
+    if fast:
+        scenarios = scenarios[:1]
+    for sc, rates in scenarios:
+        (lam_o, lam_i), us = timed(
+            lambda: (ours.max_scale(rates), ideal.max_scale(rates)))
+        ratio = lam_o / lam_i if lam_i else 1.0
+        ratios.append(ratio)
+        rows.append(Row(f"fig16/{sc}", us,
+                        f"ours={lam_o:.2f}x ideal={lam_i:.2f}x "
+                        f"ratio={100*ratio:.1f}%"))
+    if not fast:
+        for app_name, app in APPLICATIONS.items():
+            aprofs = app.profiles(profs)
+            o = ElasticPartitioning(aprofs, intf_model=intf)
+            i = IdealScheduler(aprofs, intf_model=intf)
+            (lo, li), us = timed(lambda: (
+                o.max_scale(app.stream_rates(1.0), hi=8192),
+                i.max_scale(app.stream_rates(1.0), hi=8192)))
+            ratio = lo / li if li else 1.0
+            ratios.append(ratio)
+            rows.append(Row(f"fig16/{app_name}", us,
+                            f"ours={lo:.0f} ideal={li:.0f} "
+                            f"ratio={100*ratio:.1f}%"))
+    rows.append(Row("fig16/avg", 0.0,
+                    f"avg_ratio={100*statistics.mean(ratios):.1f}% "
+                    f"(paper 92.3%)"))
+    return rows

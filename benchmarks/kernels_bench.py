@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: pure-jnp reference path timings on CPU.
+
+(The Pallas kernels target TPU; interpret mode is a correctness harness, not
+a performance path, so us_per_call here times the jnp reference the dry-run
+lowers.  Derived fields record interpret-mode max error vs. the oracle.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(fast: bool = False) -> list[Row]:
+    key = jax.random.key(0)
+    rows = []
+
+    # flash attention
+    b, h, hkv, s, dh = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (b, h, s, dh), jnp.float32)
+    k = jax.random.normal(key, (b, hkv, s, dh), jnp.float32)
+    v = jax.random.normal(key, (b, hkv, s, dh), jnp.float32)
+    jit_ref = jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True))
+    us = _time(jit_ref, q, k, v)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(jit_ref(q, k, v)))))
+    rows.append(Row("kernels/flash_attention", us,
+                    f"shape=b{b}h{h}s{s}d{dh} interpret_err={err:.2e}"))
+
+    # decode attention
+    q1 = jax.random.normal(key, (2, 8, 64), jnp.float32)
+    kc = jax.random.normal(key, (2, 1024, 2, 64), jnp.float32)
+    vc = jax.random.normal(key, (2, 1024, 2, 64), jnp.float32)
+    lens = jnp.array([700, 1000], jnp.int32)
+    jit_ref2 = jax.jit(lambda *a: ref.decode_attention_ref(*a))
+    us = _time(jit_ref2, q1, kc, vc, lens)
+    out = decode_attention(q1, kc, vc, lens, interpret=True)
+    err = float(np.max(np.abs(np.asarray(out)
+                              - np.asarray(jit_ref2(q1, kc, vc, lens)))))
+    rows.append(Row("kernels/decode_attention", us,
+                    f"cache=1024x2x64 interpret_err={err:.2e}"))
+
+    # ssd scan
+    xh = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 512, 4)))
+    a = -jnp.exp(jax.random.normal(key, (4,)))
+    bm = jax.random.normal(key, (1, 512, 64), jnp.float32) * 0.3
+    cm = jax.random.normal(key, (1, 512, 64), jnp.float32) * 0.3
+    jit_ref3 = jax.jit(lambda *args: ref.ssd_scan_ref(*args)[0])
+    us = _time(jit_ref3, xh, dt, a, bm, cm)
+    out = ssd_scan(xh, dt, a, bm, cm, chunk=128, interpret=True)
+    err = float(np.max(np.abs(np.asarray(out)
+                              - np.asarray(jit_ref3(xh, dt, a, bm, cm)))))
+    rows.append(Row("kernels/ssd_scan", us,
+                    f"s512h4p64n64 interpret_err={err:.2e}"))
+
+    # rglru scan
+    ag = jax.nn.sigmoid(jax.random.normal(key, (2, 512, 256))) * 0.2 + 0.8
+    bg = jax.random.normal(key, (2, 512, 256)) * 0.1
+    jit_ref4 = jax.jit(lambda *args: ref.rglru_scan_ref(*args)[0])
+    us = _time(jit_ref4, ag, bg)
+    out = rglru_scan(ag, bg, block_t=128, interpret=True)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(jit_ref4(ag, bg)))))
+    rows.append(Row("kernels/rglru_scan", us,
+                    f"s512w256 interpret_err={err:.2e}"))
+    return rows

@@ -1,0 +1,60 @@
+"""§Roofline: per-(arch x shape x mesh) roofline terms from the dry-run.
+
+Reads results/dryrun.jsonl (launch/dryrun.py output).  One row per combo:
+the three terms in seconds, the dominant bottleneck, and the useful-FLOP
+ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+DEFAULT_PATHS = ("results/dryrun.jsonl", "results/dryrun_mp.jsonl",
+                 "results/dryrun_opt.jsonl")
+
+
+def load_records(paths=DEFAULT_PATHS):
+    recs = []
+    for path in paths:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                try:
+                    recs.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    return recs
+
+
+def run(fast: bool = False) -> list[Row]:
+    recs = load_records()
+    if not recs:
+        return [Row("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all "
+                    "--out results/dryrun.jsonl")]
+    rows = []
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        key = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            rows.append(Row(key, 0.0, f"SKIP ({r['reason']})"))
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            rows.append(Row(key, 0.0, "ERROR " + r.get("error", "?")[:80]))
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        rows.append(Row(
+            key, r.get("compile_s", 0) * 1e6,
+            f"compute={rf['compute_s']:.4g}s memory={rf['memory_s']:.4g}s "
+            f"collective={rf['collective_s']:.4g}s "
+            f"dominant={rf['dominant'].replace('_s','')} "
+            f"useful_flop_ratio={rf['useful_flop_ratio']:.3f}"))
+    rows.append(Row("roofline/summary", 0.0,
+                    f"ok={n_ok} skipped={n_skip} errors={n_err}"))
+    return rows

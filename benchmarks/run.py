@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--fast`` shrinks the expensive
+simulations/exhaustive searches for CI use.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig03_latency_curves",
+    "benchmarks.fig04_schedulability",
+    "benchmarks.fig06_interference_cdf",
+    "benchmarks.fig09_intf_model_error",
+    "benchmarks.fig12_throughput",
+    "benchmarks.fig13_slo_violation",
+    "benchmarks.fig14_fluctuation",
+    "benchmarks.fig15_ideal_comparison",
+    "benchmarks.kernels_bench",
+    "benchmarks.ablations",
+    "benchmarks.roofline",
+    "benchmarks.tpulet_serving",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row in mod.run(fast=args.fast):
+                print(row.csv())
+                sys.stdout.flush()
+        except Exception:
+            failed += 1
+            print(f"{modname},0,ERROR")
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Quickstart: the paper in 60 seconds.
+
+1. Calibrate the five paper models' L(b, p) profiles (Table 4).
+2. Fit the linear interference model (§4.4).
+3. Run Elastic Partitioning (Alg. 1) on the 'equal' scenario.
+4. Simulate 10 s of Poisson traffic against the schedule and report SLOs.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (ElasticPartitioning, SquishyBinPacking,
+                        calibrate_profiles, fit_default_model)
+from repro.core.scenarios import REQUEST_SCENARIOS
+from repro.simulator import PoissonArrivals, SimConfig, simulate_schedule
+from repro.simulator.events import merge_sorted
+
+
+def main():
+    profiles = calibrate_profiles()
+    intf, stats = fit_default_model(profiles)
+    print(f"interference model: p90 err {stats['p90_rel_err']:.1%} "
+          f"(paper: 10.3%)")
+
+    rates = {m: 4.0 * r for m, r in REQUEST_SCENARIOS["equal"].items()}
+    for sched in (SquishyBinPacking(profiles),
+                  ElasticPartitioning(profiles, intf_model=intf)):
+        res = sched.schedule(rates)
+        print(f"\n== {sched.name}: schedulable={res.schedulable} "
+              f"(used partitions {res.used_partition_total()}%)")
+        for gpu in res.gpus:
+            desc = " | ".join(
+                f"{let.size}%: " + (",".join(
+                    f"{a.model}@{a.rate:.0f}/s(b{a.batch})"
+                    for a in let.assignments) or "free")
+                for let in gpu.lets)
+            print(f"  GPU{gpu.gpu_id}: {desc}")
+        if not res.schedulable:
+            continue
+        gen = PoissonArrivals(seed=0)
+        reqs = merge_sorted([gen.constant(m, r, profiles[m].slo_ms, 10_000.0)
+                             for m, r in rates.items()])
+        met = simulate_schedule(res, profiles, reqs,
+                                SimConfig(horizon_ms=10_000.0))
+        print(f"  simulated: {met.total} reqs, "
+              f"violations {met.violation_rate:.2%}, "
+              f"goodput {met.goodput_req_s:.0f}/s")
+
+
+if __name__ == "__main__":
+    main()

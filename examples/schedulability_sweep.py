@@ -1,0 +1,36 @@
+"""Fig. 4/15 demo: schedulability across the 1,023-scenario population.
+
+Run:  PYTHONPATH=src python examples/schedulability_sweep.py [--stride 8]
+"""
+import argparse
+
+from repro.core import (ElasticPartitioning, SquishyBinPacking,
+                        calibrate_profiles, fit_default_model)
+from repro.core.scenarios import schedulability_population
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stride", type=int, default=8)
+    args = ap.parse_args()
+    profiles = calibrate_profiles()
+    intf, _ = fit_default_model(profiles)
+    pop = schedulability_population()[::args.stride]
+    rows = [
+        ("SBP (no partitioning)", SquishyBinPacking(profiles)),
+        ("SBP (even 50:50 split)", SquishyBinPacking(profiles,
+                                                     split_even=True)),
+        ("Elastic (gpulet)", ElasticPartitioning(profiles)),
+        ("Elastic (gpulet+int)", ElasticPartitioning(profiles,
+                                                     intf_model=intf)),
+    ]
+    print(f"population: {len(pop)} scenarios "
+          f"(rates in {{0,200,400,600}} req/s x 5 models)")
+    for name, sched in rows:
+        n = sum(1 for r in pop if sched.is_schedulable(r))
+        bar = "#" * int(40 * n / len(pop))
+        print(f"{name:<26} {n:4d}/{len(pop)}  |{bar:<40}|")
+
+
+if __name__ == "__main__":
+    main()

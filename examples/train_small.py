@@ -1,0 +1,12 @@
+"""Train a ~100M-param model for a few hundred steps on CPU (substrate demo).
+
+Run:  PYTHONPATH=src python examples/train_small.py [--arch yi-9b] [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    raise SystemExit(main())

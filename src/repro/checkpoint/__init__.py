@@ -1,0 +1,4 @@
+"""Pytree checkpointing (npz + json manifest; no pickle)."""
+from repro.checkpoint.store import save_checkpoint, load_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,68 @@
+"""Flat-key npz checkpointing for parameter/optimizer pytrees.
+
+Keys are the joined tree paths; a JSON manifest records dtype/shape and the
+original tree structure so loading reconstructs the exact pytree (lists vs
+dicts, bf16 round-trip via uint16 views).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, tree, step: int | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    manifest = {"treedef": str(treedef), "entries": [], "step": step}
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = np.asarray(leaf)
+        stored_dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+        manifest["entries"].append(
+            {"key": key, "dtype": stored_dtype, "shape": list(arr.shape)})
+    tag = f"ckpt_{step}" if step is not None else "ckpt"
+    npz_path = os.path.join(directory, tag + ".npz")
+    np.savez(npz_path, **arrays)
+    with open(os.path.join(directory, tag + ".json"), "w") as f:
+        json.dump(manifest, f)
+    return npz_path
+
+
+def load_checkpoint(directory: str, like, step: int | None = None):
+    """Load into the structure of ``like`` (shapes/dtypes must match)."""
+    tag = f"ckpt_{step}" if step is not None else "ckpt"
+    data = np.load(os.path.join(directory, tag + ".npz"))
+    with open(os.path.join(directory, tag + ".json")) as f:
+        manifest = json.load(f)
+    dtypes = {e["key"]: e["dtype"] for e in manifest["entries"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = data[key]
+        if dtypes[key] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

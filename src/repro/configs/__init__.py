@@ -1,0 +1,69 @@
+"""Assigned architecture configs (exact published hyper-parameters).
+
+``get_config(arch_id)`` returns the full-size ModelConfig;
+``get_smoke_config(arch_id)`` returns a reduced variant of the same family
+(<=2 layers, d_model<=512, <=4 experts) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "deepseek-moe-16b",
+    "internvl2-76b",
+    "stablelm-12b",
+    "arctic-480b",
+    "chatglm3-6b",
+    "recurrentgemma-2b",
+    "mamba2-780m",
+    "yi-9b",
+    "command-r-35b",
+    "hubert-xlarge",
+)
+
+
+def _module(arch_id: str):
+    return importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_"))
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str):
+    """Reduced same-family variant: <=2 layers, d_model<=512, <=4 experts."""
+    cfg = get_config(arch_id)
+    pattern = cfg.pattern
+    n_layers = min(cfg.n_layers, 2)
+    if cfg.arch_type == "hybrid":
+        n_layers = 3  # keep one full (rec, rec, attn) pattern unit
+    updates = dict(
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=256,
+        vocab_size=min(cfg.vocab_size, 1024),
+        n_heads=min(cfg.n_heads, 4) if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        d_head=64 if cfg.n_heads else 0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        moe_d_ff=min(cfg.moe_d_ff, 256) if cfg.moe_d_ff else 0,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        ssm_d_state=min(cfg.ssm_d_state, 32) if cfg.ssm_d_state else 0,
+        ssm_headdim=32 if cfg.arch_type == "ssm" else cfg.ssm_headdim,
+        ssm_chunk=16,
+        lru_width=256 if cfg.lru_width else 0,
+        local_window=64 if cfg.arch_type == "hybrid" else cfg.local_window,
+        sliding_window=cfg.sliding_window and min(cfg.sliding_window, 64),
+        pattern=pattern,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 16),
+    )
+    return dataclasses.replace(cfg, **updates)
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config"]

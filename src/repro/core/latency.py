@@ -1,0 +1,307 @@
+"""The L(b, p) latency function and derived scheduling quantities.
+
+The paper profiles L(b, p) — batch-b inference latency on a partition of
+size p — on hardware (Fig. 3) and feeds it to the scheduler (Table 2).  This
+module provides the analytic, calibrated stand-in for those measurements
+(CPU-only container; see DESIGN.md §2) and every derived quantity the
+schedulers need:
+
+  * ``latency_ms(prof, b, p)``            — L(b, p)
+  * ``max_batch_under_slo(prof, p, slo)`` — argmax_b L(b,p) <= slo   (Alg.1 l.27)
+  * ``max_rate(prof, p)``                 — sustainable req/s of a gpu-let
+  * ``min_required_partition(prof, rate)``— p_req  (Alg.1 l.10)
+  * ``max_efficient_partition(prof)``     — p_eff, the knee (Alg.1 l.9, Fig.8)
+
+Latency model::
+
+    L(b, p) = t0 + b*flops/(peak * eff * min(p, par(b))) + bytes(b)/BW
+
+The ``min(p, par(b))`` term produces Fig. 3's knee: a small batch saturates
+at par(b) < 1 and extra partition is wasted (flat region), while batch 32
+keeps using resource.  bytes(b) = weights + b*activations: the weight-read
+term is partition-independent, matching the observation that small-batch
+latency barely moves with p.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from collections.abc import Sequence
+
+from repro.core.hardware import AcceleratorSpec, RTX_2080TI
+from repro.core.profiles import ModelProfile
+
+#: Partition sizes (percent) available to the scheduler.  The paper splits
+#: one GPU into at most two gpu-lets with ratios from
+#: {(2:8),(4:6),(5:5),(6:4),(8:2)} plus the unsplit GPU (§3.2, §6).
+PARTITION_SIZES: tuple[int, ...] = (20, 40, 50, 60, 80, 100)
+
+#: Allowed (left, right) splits of a 100% GPU into two gpu-lets.
+SPLIT_PAIRS: tuple[tuple[int, int], ...] = (
+    (20, 80), (40, 60), (50, 50), (60, 40), (80, 20))
+
+#: Batch sizes considered by the scheduler (paper sweeps up to 32; >32 makes
+#: the SLO "unrealistically long", §6.1).
+BATCH_SIZES: tuple[int, ...] = tuple(range(1, 33))
+MAX_BATCH = 32
+
+
+def raw_compute_ms(prof: ModelProfile, batch: int, p: float,
+                   acc: AcceleratorSpec = RTX_2080TI) -> float:
+    """Compute-roofline term at efficiency 1.0 (used by calibration)."""
+    p_eff = min(p, prof.parallelism(batch))
+    p_eff = max(p_eff, 1e-3)
+    gflops = prof.flops_per_req * batch
+    return gflops / (acc.peak_tflops * 1e3 * p_eff) * 1e3  # ms
+
+
+def memory_ms(prof: ModelProfile, batch: int, p: float,
+              acc: AcceleratorSpec = RTX_2080TI) -> float:
+    """HBM-traffic term.
+
+    MPS compute provisioning does not partition memory bandwidth (the paper
+    notes bandwidth isolation only arrives with Ampere/MIG), so the weight
+    read is partition-independent; we model a mild bandwidth penalty for very
+    small partitions since fewer SMs issue fewer outstanding loads.
+    """
+    bw_frac = 0.5 + 0.5 * min(1.0, 2.0 * p)  # 0.7 at p=0.2 .. 1.0 at p>=0.5
+    mb = prof.weight_mb + prof.act_mb_per_req * batch
+    return mb / (acc.hbm_gbs * bw_frac) * 1e3 / 1e3  # MB/(GB/s) -> ms
+
+
+def latency_ms(prof: ModelProfile, batch: int, p: float,
+               acc: AcceleratorSpec = RTX_2080TI) -> float:
+    """L(b, p): batch-``batch`` latency (ms) on partition fraction ``p``."""
+    if batch <= 0:
+        return 0.0
+    return (prof.t0_ms
+            + raw_compute_ms(prof, batch, p, acc) / prof.efficiency
+            + memory_ms(prof, batch, p, acc))
+
+
+def max_batch_under_slo(prof: ModelProfile, p: float, slo_ms: float,
+                        intf_factor: float = 1.0,
+                        acc: AcceleratorSpec = RTX_2080TI,
+                        headroom: float = 0.5) -> int:
+    """argmax_b  intf * L(b, p) <= headroom * slo  (0 if even b=1 misses).
+
+    ``headroom`` reserves budget for batch *building* time: with duty-cycled
+    execution a request waits up to one duty cycle before its batch runs
+    (Fig. 1), so admission uses L(b,p) <= SLO/2 as in Nexus.
+    """
+    best = 0
+    for b in BATCH_SIZES:
+        if intf_factor * latency_ms(prof, b, p, acc) <= headroom * slo_ms:
+            best = b
+    return best
+
+
+def max_rate(prof: ModelProfile, p: float, intf_factor: float = 1.0,
+             acc: AcceleratorSpec = RTX_2080TI) -> float:
+    """Max sustainable request rate (req/s) of a gpu-let of size ``p``.
+
+    With duty-cycle pipelining the gpu-let executes back-to-back batches of
+    size b: throughput = b / L.  The interference factor enters only the SLO
+    *admission* check (Alg. 1 line 28: ``L(b, p) + intf <= SLO``) — it trims
+    the admissible batch but does not deflate the booked throughput; the
+    scheduler's burst headroom absorbs the actual runtime slowdown.
+    """
+    best = 0.0
+    for b in BATCH_SIZES:
+        lat = latency_ms(prof, b, p, acc)
+        if intf_factor * lat <= 0.5 * prof.slo_ms:
+            best = max(best, b / (lat / 1e3))
+    return best
+
+
+def rate_curve(prof: ModelProfile, intf_factor: float = 1.0,
+               acc: AcceleratorSpec = RTX_2080TI,
+               sizes: Sequence[int] = PARTITION_SIZES) -> list[tuple[int, float]]:
+    """(partition %, max rate) points — the curve of Fig. 8."""
+    return [(s, max_rate(prof, s / 100.0, intf_factor, acc)) for s in sizes]
+
+
+def max_efficient_partition(prof: ModelProfile,
+                            acc: AcceleratorSpec = RTX_2080TI) -> int:
+    """p_eff: the knee of the rate-vs-partition curve (Fig. 8).
+
+    MAXEFFICIENTPARTITION "calculates the curvature at the profiled gpulet
+    size and uses the gpulet size at the knee" — we use the discrete second
+    difference of the normalized curve and take its maximum (the point where
+    marginal gain drops fastest).  Falls back to the smallest partition that
+    achieves >=90% of the full-GPU rate when the curve is near-linear.
+    """
+    pts = rate_curve(prof, acc=acc)
+    # prepend the origin so a curve that is already flat at the smallest
+    # profiled size puts its knee *at* that size (e.g. tiny models).
+    sizes = [0] + [s for s, _ in pts]
+    rates = [0.0] + [r for _, r in pts]
+    full = rates[-1] if rates[-1] > 0 else 1.0
+    norm = [r / full for r in rates]
+    # knee by max negative curvature of normalized rate vs normalized size
+    best_i, best_curv = len(sizes) - 1, -math.inf
+    for i in range(1, len(sizes) - 1):
+        ds0 = (sizes[i] - sizes[i - 1]) / 100.0
+        ds1 = (sizes[i + 1] - sizes[i]) / 100.0
+        d0 = (norm[i] - norm[i - 1]) / ds0
+        d1 = (norm[i + 1] - norm[i]) / ds1
+        curv = d0 - d1  # concavity: drop in marginal gain at i
+        if curv > best_curv:
+            best_curv, best_i = curv, i
+    if best_curv <= 1e-6:  # near-linear: every % helps equally
+        for s, n in zip(sizes, norm):
+            if n >= 0.90:
+                return s
+        return 100
+    return sizes[best_i]
+
+
+def min_required_partition(prof: ModelProfile, rate: float,
+                           intf_factor: float = 1.0,
+                           acc: AcceleratorSpec = RTX_2080TI) -> int | None:
+    """p_req: smallest partition sustaining ``rate`` req/s, or None."""
+    for s in PARTITION_SIZES:
+        if max_rate(prof, s / 100.0, intf_factor, acc) >= rate:
+            return s
+    return None
+
+
+class LatencyProvider:
+    """Pluggable L(b, p) source for the schedulers.
+
+    The default (`AnalyticGPULatency`) is the calibrated analytic model of
+    the paper's 2080 Ti testbed; `core/tpulets.RooflineLatency` derives
+    L(b, p) from the compiled dry-run's roofline terms instead (a tpu-let =
+    a sub-mesh; p = fraction of the pod).  Everything the schedulers need is
+    expressed through this interface.
+    """
+
+    #: partition sizes (%) this substrate supports
+    partition_sizes: tuple[int, ...] = PARTITION_SIZES
+    #: allowed (left, right) splits of a whole device
+    split_pairs: tuple[tuple[int, int], ...] = SPLIT_PAIRS
+    batch_sizes: tuple[int, ...] = BATCH_SIZES
+    max_batch: int = MAX_BATCH
+
+    def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
+        raise NotImplementedError
+
+    # ---- generic derived quantities (paper Alg. 1 inputs) -----------------
+
+    def max_batch_under_slo(self, prof, p, slo_ms, intf_factor=1.0,
+                            headroom=0.5) -> int:
+        best = 0
+        for b in self.batch_sizes:
+            if intf_factor * self.latency_ms(prof, b, p) <= headroom * slo_ms:
+                best = b
+        return best
+
+    def max_rate(self, prof, p, intf_factor=1.0) -> float:
+        best = 0.0
+        for b in self.batch_sizes:
+            lat = self.latency_ms(prof, b, p)
+            if intf_factor * lat <= 0.5 * prof.slo_ms and lat > 0:
+                best = max(best, b / (lat / 1e3))
+        return best
+
+    def rate_curve(self, prof, intf_factor=1.0):
+        return [(s, self.max_rate(prof, s / 100.0, intf_factor))
+                for s in self.partition_sizes]
+
+    def max_efficient_partition(self, prof) -> int:
+        pts = self.rate_curve(prof)
+        sizes = [0] + [s for s, _ in pts]
+        rates = [0.0] + [r for _, r in pts]
+        full = rates[-1] if rates[-1] > 0 else 1.0
+        norm = [r / full for r in rates]
+        best_i, best_curv = len(sizes) - 1, -math.inf
+        for i in range(1, len(sizes) - 1):
+            ds0 = (sizes[i] - sizes[i - 1]) / 100.0
+            ds1 = (sizes[i + 1] - sizes[i]) / 100.0
+            d0 = (norm[i] - norm[i - 1]) / ds0
+            d1 = (norm[i + 1] - norm[i]) / ds1
+            curv = d0 - d1
+            if curv > best_curv:
+                best_curv, best_i = curv, i
+        if best_curv <= 1e-6:
+            for s, n in zip(sizes[1:], norm[1:]):
+                if n >= 0.90:
+                    return s
+            return 100
+        return sizes[best_i]
+
+    def min_required_partition(self, prof, rate, intf_factor=1.0):
+        for s in self.partition_sizes:
+            if self.max_rate(prof, s / 100.0, intf_factor) >= rate:
+                return s
+        return None
+
+    def duty_cycle_feasible(self, entries, p, intf_factor=1.0):
+        if not entries:
+            return True, 0.0, []
+        slo_min = min(prof.slo_ms for prof, _ in entries)
+        n_grid = 24
+        for k in range(n_grid, 0, -1):
+            duty = slo_min * k / n_grid
+            batches, exec_sum, ok = [], 0.0, True
+            for prof, rate in entries:
+                b = max(1, math.ceil(rate * duty / 1e3))
+                if b > self.max_batch:
+                    ok = False
+                    break
+                lat = self.latency_ms(prof, b, p)
+                if duty + intf_factor * lat > prof.slo_ms:
+                    ok = False
+                    break
+                batches.append(b)
+                exec_sum += lat
+            if ok and exec_sum <= duty:
+                return True, duty, batches
+        return False, 0.0, []
+
+
+class AnalyticGPULatency(LatencyProvider):
+    """The paper-testbed latency model (module functions above)."""
+
+    def __init__(self, acc: AcceleratorSpec = RTX_2080TI):
+        self.acc = acc
+
+    def latency_ms(self, prof, batch, p):
+        return latency_ms(prof, batch, p, self.acc)
+
+
+def duty_cycle_feasible(entries: Sequence[tuple[ModelProfile, float]],
+                        p: float, intf_factor: float = 1.0,
+                        acc: AcceleratorSpec = RTX_2080TI,
+                        ) -> tuple[bool, float, list[int]]:
+    """Feasibility of temporally sharing one gpu-let among several models.
+
+    ``entries`` is [(profile, rate_req_s), ...].  Searches duty cycles D:
+    batches b_i = ceil(rate_i * D) must satisfy (a) sum_i L(b_i, p) <= D
+    (execution pipeline keeps up) and (b) D + intf*L(b_i, p) <= SLO_i for all
+    i (batch build + execution within SLO, Fig. 1; interference enters the
+    SLO check only, per Alg. 1 line 28).  Returns (feasible, duty_ms,
+    batches).
+    """
+    if not entries:
+        return True, 0.0, []
+    slo_min = min(prof.slo_ms for prof, _ in entries)
+    # candidate duty cycles: scan a grid up to the tightest SLO
+    n_grid = 24
+    for k in range(n_grid, 0, -1):
+        duty = slo_min * k / n_grid
+        batches, exec_sum, ok = [], 0.0, True
+        for prof, rate in entries:
+            b = max(1, math.ceil(rate * duty / 1e3))
+            if b > MAX_BATCH:
+                ok = False
+                break
+            lat = latency_ms(prof, b, p, acc)
+            if duty + intf_factor * lat > prof.slo_ms:
+                ok = False
+                break
+            batches.append(b)
+            exec_sum += lat
+        if ok and exec_sum <= duty:
+            return True, duty, batches
+    return False, 0.0, []

@@ -1,0 +1,85 @@
+"""The paper's evaluation workloads (§6.1, Tables 4-5, Figs. 10-11).
+
+* Three request scenarios (Table 5): equal, long-only, short-skew.
+* Two multi-model applications: ``game`` (6x LeNet + 1x ResNet50 per request,
+  SLO 95 ms) and ``traffic`` (SSD -> {GoogLeNet, VGG-16}, SLO 136 ms).  The
+  application request rate R expands to per-model rates via the dataflow
+  multiplicities; application SLOs override the per-model SLOs.
+* The 1,023-scenario schedulability population: rates drawn from
+  {0, 200, 400, 600} req/s for each of the five models, minus the all-zero
+  vector (4^5 - 1 = 1023).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.profiles import ModelProfile, PAPER_MODELS
+
+# Table 5 -------------------------------------------------------------------
+REQUEST_SCENARIOS: dict[str, dict[str, float]] = {
+    "equal":      {"le": 50, "goo": 50, "res": 50, "ssd": 50, "vgg": 50},
+    "long-only":  {"le": 0, "goo": 0, "res": 100, "ssd": 100, "vgg": 100},
+    "short-skew": {"le": 100, "goo": 100, "res": 100, "ssd": 50, "vgg": 50},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Application:
+    """A multi-model application DAG (Figs. 10-11).
+
+    ``streams`` lists the component inferences as *separate model streams*
+    (the game app really runs six distinct LeNet digit recognizers, Fig. 10);
+    each stream sees the full application request rate.  Modeling them as
+    streams rather than one aggregated rate is what exposes the temporal-
+    sharing advantage the paper reports for ``game``.
+    """
+
+    name: str
+    slo_ms: float
+    streams: tuple[tuple[str, str], ...]  # (stream_name, model)
+
+    @property
+    def n_inferences(self) -> int:
+        return len(self.streams)
+
+    def stream_rates(self, app_rate: float) -> dict[str, float]:
+        return {s: app_rate for s, _ in self.streams}
+
+    def profiles(self, base: dict[str, ModelProfile] | None = None
+                 ) -> dict[str, ModelProfile]:
+        """Per-stream profiles with the application SLO substituted.
+
+        ``base`` must be the *calibrated* profile set; defaults to
+        calibrating the paper models on the paper cluster.
+        """
+        if base is None:
+            from repro.core.profiles import calibrate_profiles
+            base = calibrate_profiles()
+        out = {}
+        for s, m in self.streams:
+            out[s] = dataclasses.replace(base[m], name=s, slo_ms=self.slo_ms)
+        return out
+
+
+APPLICATIONS: dict[str, Application] = {
+    # Fig. 10: six LeNet digit recognizers + one ResNet-50, SLO 95 ms.
+    "game": Application("game", 95.0, tuple(
+        [(f"le{i}", "le") for i in range(6)] + [("res", "res")])),
+    # Fig. 11: SSD detector feeding GoogLeNet + VGG-16 recognizers, SLO 136.
+    "traffic": Application("traffic", 136.0,
+                           (("ssd", "ssd"), ("goo", "goo"), ("vgg", "vgg"))),
+}
+
+SCHEDULABILITY_RATES = (0, 200, 400, 600)
+
+
+def schedulability_population(models: tuple[str, ...] = ("le", "goo", "res", "ssd", "vgg"),
+                              ) -> list[dict[str, float]]:
+    """All 4^5 - 1 = 1023 rate vectors of §3.1 / Fig. 4 / Fig. 15."""
+    pop = []
+    for combo in itertools.product(SCHEDULABILITY_RATES, repeat=len(models)):
+        if all(c == 0 for c in combo):
+            continue
+        pop.append({m: float(r) for m, r in zip(models, combo) if r > 0})
+    return pop

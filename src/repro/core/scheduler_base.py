@@ -1,0 +1,201 @@
+"""Shared scheduling plumbing: workloads, results, admission tests.
+
+All four schedulers (elastic/gpulet, SBP, guided self-tuning, ideal) share
+the same vocabulary: a *workload* (model -> req/s), a *cluster* of GPUs each
+holding gpu-lets, and admission tests built from L(b, p) plus the (optional)
+interference model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections.abc import Mapping, Sequence
+
+from repro.core import latency as latmod
+from repro.core.latency import AnalyticGPULatency, LatencyProvider
+from repro.core.gpulet import Assignment, GpuLet, GpuState, fresh_cluster
+from repro.core.hardware import AcceleratorSpec, ClusterSpec, PAPER_CLUSTER, RTX_2080TI
+from repro.core.interference import InterferenceModel
+from repro.core.profiles import ModelProfile
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    """Outcome of one scheduling pass."""
+
+    gpus: list[GpuState]
+    schedulable: bool
+    unplaced: dict[str, float] = dataclasses.field(default_factory=dict)
+    scheduler: str = ""
+
+    @property
+    def gpulets(self) -> list[GpuLet]:
+        return [l for g in self.gpus for l in g.lets]
+
+    def used_partition_total(self) -> int:
+        """Sum of gpu-let sizes (%) that have at least one assignment."""
+        return sum(l.size for l in self.gpulets if not l.is_free)
+
+    def assignments_by_model(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for let in self.gpulets:
+            for a in let.assignments:
+                out[a.model] = out.get(a.model, 0.0) + a.rate
+        return out
+
+
+class SchedulerBase:
+    """Common machinery; subclasses implement ``schedule``."""
+
+    name = "base"
+
+    def __init__(self,
+                 profiles: Mapping[str, ModelProfile],
+                 cluster: ClusterSpec = PAPER_CLUSTER,
+                 intf_model: InterferenceModel | None = None,
+                 acc: AcceleratorSpec | None = None,
+                 headroom: float = 0.80,
+                 lat: LatencyProvider | None = None):
+        self.profiles = dict(profiles)
+        self.cluster = cluster
+        self.intf_model = intf_model
+        self.acc = acc or cluster.accelerator
+        # pluggable L(b, p): analytic GPU model by default, roofline-derived
+        # tpu-let model via core/tpulets.py
+        self.lat = lat or AnalyticGPULatency(self.acc)
+        # Burst headroom: admission sizes batches/capacity for rate/headroom
+        # so Poisson bursts (the paper's arrival model) don't overflow duty
+        # cycles.  Applied identically to every scheduler.
+        self.headroom = headroom
+
+    # ---- interference ----------------------------------------------------
+
+    def intf_factor(self, model: str, let: GpuLet, gpu: GpuState,
+                    extra_partner: str | None = None) -> float:
+        """Predicted slowdown of ``model`` on ``let`` given co-partition.
+
+        Uses the max over the partner gpu-let's models (conservative).  With
+        no interference model (the plain ``gpulet`` variant) returns 1.0.
+        """
+        if self.intf_model is None:
+            return 1.0
+        partner = gpu.partner_of(let)
+        if partner is None:
+            return 1.0  # unsplit GPU: no spatial co-location possible
+        partner_models = list(partner.models)
+        if extra_partner is not None:
+            partner_models.append(extra_partner)
+        prof = self.profiles[model]
+        if not partner_models:
+            # Prospective interference: the partner gpu-let is still free but
+            # will likely be filled later; reserve slack for the *expected*
+            # co-runner (mean prediction over the workload's models).  This
+            # is the "conservative decision" the paper attributes to
+            # gpulet+int — mild enough to cost only a few percent throughput.
+            preds = [self.intf_model.predict_pair(
+                prof, let.frac, other, partner.frac, self.acc)
+                for other in self.profiles.values()]
+            return sum(preds) / len(preds)
+        worst = 1.0
+        for om in partner_models:
+            f = self.intf_model.predict_pair(
+                prof, let.frac, self.profiles[om], partner.frac, self.acc)
+            worst = max(worst, f)
+        return worst
+
+    # ---- admission -------------------------------------------------------
+
+    def capacity(self, model: str, frac: float, f: float = 1.0) -> float:
+        """Burst-adjusted sustainable req/s for a gpu-let fraction."""
+        return self.headroom * self.lat.max_rate(self.profiles[model], frac, f)
+
+    def gpulet_capacity(self, model: str, let: GpuLet, gpu: GpuState) -> float:
+        """Max req/s this gpu-let can take for ``model`` (exclusive use)."""
+        f = self.intf_factor(model, let, gpu)
+        return self.capacity(model, let.frac, f)
+
+    def feasible_with(self, let: GpuLet, gpu: GpuState,
+                      extra: Sequence[tuple[str, float]] = ()) -> tuple[bool, float, list[int]]:
+        """Duty-cycle feasibility of let's current models plus ``extra``.
+
+        Rates are inflated by 1/headroom so the chosen batch sizes can absorb
+        Poisson bursts within one duty cycle.
+        """
+        entries = [(self.profiles[a.model], a.rate / self.headroom)
+                   for a in let.assignments]
+        entries += [(self.profiles[m], r / self.headroom) for m, r in extra]
+        # worst interference over all models involved
+        f = 1.0
+        for m, _ in [(a.model, 0) for a in let.assignments] + list(extra):
+            f = max(f, self.intf_factor(m, let, gpu))
+        return self.lat.duty_cycle_feasible(entries, let.frac, f)
+
+    def assign(self, let: GpuLet, gpu: GpuState, model: str, rate: float) -> bool:
+        """Place (model, rate) on a gpu-let if feasible; records duty/batch.
+
+        With an interference model, the *partner* gpu-let's assignments are
+        revalidated under the updated co-location — a later placement must
+        not silently push an earlier one over its SLO (this revalidation is
+        what lets gpulet+int "filter out" the violating rates of Fig. 13).
+        """
+        ok, duty, batches = self.feasible_with(let, gpu, [(model, rate)])
+        if not ok:
+            return False
+        f = self.intf_factor(model, let, gpu)
+        saved = list(let.assignments)
+        entries = [(a.model, a.rate) for a in let.assignments] + [(model, rate)]
+        let.assignments = []
+        for (m, r), b in zip(entries, batches):
+            lat = f * self.lat.latency_ms(self.profiles[m], b, let.frac)
+            let.assignments.append(Assignment(
+                model=m, rate=r, batch=b, duty_ms=duty, est_latency_ms=lat))
+        if self.intf_model is not None:
+            part = gpu.partner_of(let)
+            if part is not None and part.assignments:
+                ok2, duty2, batches2 = self.feasible_with(part, gpu)
+                if not ok2:
+                    let.assignments = saved  # rollback
+                    return False
+                fp = max((self.intf_factor(a.model, part, gpu)
+                          for a in part.assignments), default=1.0)
+                part.assignments = [
+                    Assignment(model=a.model, rate=a.rate, batch=b,
+                               duty_ms=duty2,
+                               est_latency_ms=fp * self.lat.latency_ms(
+                                   self.profiles[a.model], b, part.frac))
+                    for a, b in zip(part.assignments, batches2)]
+        return True
+
+    # ---- API ---------------------------------------------------------------
+
+    def schedule(self, rates: Mapping[str, float]) -> ScheduleResult:
+        raise NotImplementedError
+
+    def is_schedulable(self, rates: Mapping[str, float]) -> bool:
+        return self.schedule(rates).schedulable
+
+    def max_scale(self, rates: Mapping[str, float],
+                  lo: float = 0.0, hi: float = 64.0,
+                  tol: float = 0.01) -> float:
+        """Largest lambda s.t. lambda * rates is schedulable (bisection)."""
+        base = {m: r for m, r in rates.items() if r > 0}
+        if not base:
+            return 0.0
+        if self.is_schedulable({m: r * hi for m, r in base.items()}):
+            return hi
+        while hi - lo > tol * max(hi, 1.0):
+            mid = 0.5 * (lo + hi)
+            if self.is_schedulable({m: r * mid for m, r in base.items()}):
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+
+def sorted_by_rate(rates: Mapping[str, float]) -> list[tuple[str, float]]:
+    """Models sorted by incoming rate, descending (Alg. 1 line 3).
+
+    Rates below 1e-6 req/s are noise (sub-request-per-11-days), not load.
+    """
+    return sorted(((m, r) for m, r in rates.items() if r > 1e-6),
+                  key=lambda kv: -kv[1])

@@ -1,0 +1,159 @@
+"""tpu-lets: the paper's gpu-let abstraction mapped onto TPU pod sub-meshes.
+
+A tpu-let is a contiguous sub-mesh of a pod (25/50/75/100% of the chips).
+Where the paper profiles L(b, p) on hardware, here the latency table is
+**derived from the compiled dry-run's roofline terms** (launch/dryrun.py):
+
+    L(b, p) = t0 + 1e3 * [ compute_ref * (b/b_ref) / p
+                         + memory_ref  * (alpha * b/b_ref + 1 - alpha) / p
+                         + collective_ref * (b/b_ref) / p ]
+
+with alpha = the batch-scaling fraction of memory traffic (KV cache and
+activations vs. weight reads), estimated from the architecture config.  The
+three _ref terms are the dry-run's per-device roofline seconds at the
+reference decode shape (decode_32k: b_ref=128 on the full 16x16 pod).
+Terms are summed (no overlap assumed — conservative, like gpulet+int).
+
+This is the beyond-paper extension flagged in DESIGN.md: scheduling without
+a hardware profiling pass.  SLOs follow the paper's convention: 2x the solo
+full-pod latency at the calibration batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.latency import LatencyProvider
+from repro.core.profiles import ModelProfile
+
+TPU_PARTITION_SIZES: tuple[int, ...] = (25, 50, 75, 100)
+TPU_SPLIT_PAIRS: tuple[tuple[int, int], ...] = ((25, 75), (50, 50), (75, 25))
+TPU_BATCH_SIZES: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+#: decode-step launch/dispatch overhead (ms) — host + ICI latency floor.
+T0_MS = 0.3
+
+
+@dataclasses.dataclass
+class ArchTerms:
+    compute_ref: float     # per-device seconds at (b_ref, full pod)
+    memory_ref: float
+    collective_ref: float
+    b_ref: int
+    alpha: float           # batch-scaling fraction of memory traffic
+    dp_ref: int = 16       # data-axis size of the reference (full-pod) mesh
+
+
+class RooflineLatency(LatencyProvider):
+    """LatencyProvider backed by dry-run roofline terms per architecture.
+
+    The TPU analogue of the paper's §3.1 underutilization is the batch/
+    data-axis floor: a decode batch cannot shard below one example per data
+    shard, so a small-batch model on a big tpu-let idles most of the data
+    axis — latency behaves as if the batch were ceil(dp(p)).  This is what
+    gives the rate-vs-partition curve its knee on TPU, exactly where
+    b = dp(p), and what elastic partitioning exploits.
+    """
+
+    partition_sizes = TPU_PARTITION_SIZES
+    split_pairs = TPU_SPLIT_PAIRS
+    batch_sizes = TPU_BATCH_SIZES
+    max_batch = TPU_BATCH_SIZES[-1]
+
+    def __init__(self, terms: dict[str, ArchTerms]):
+        self.terms = terms
+
+    def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
+        t = self.terms[prof.name]
+        b_floor = max(1, round(t.dp_ref * p))   # one example per data shard
+        bscale = max(batch, b_floor) / t.b_ref
+        sec = (t.compute_ref * bscale
+               + t.memory_ref * (t.alpha * bscale + (1 - t.alpha))
+               + t.collective_ref * bscale) / max(p, 1e-3)
+        return T0_MS + 1e3 * sec
+
+
+def _kv_alpha(cfg, seq_len: int, b_ref: int) -> float:
+    """Fraction of per-step HBM traffic that scales with batch."""
+    param_bytes = cfg.param_count() * 2
+    if cfg.arch_type == "ssm":
+        per_req = (cfg.ssm_n_heads * cfg.ssm_d_state * cfg.ssm_headdim * 4
+                   * cfg.n_layers)
+    elif cfg.arch_type == "hybrid":
+        kinds = cfg.layer_types()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        per_req = (2 * n_attn * cfg.n_kv_heads * cfg.head_dim
+                   * min(seq_len, cfg.local_window) * 2)
+        per_req += (len(kinds) - n_attn) * (cfg.lru_width or cfg.d_model) * 4
+    else:
+        per_req = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+                   * seq_len * 2)
+    batch_bytes = per_req * b_ref
+    return batch_bytes / max(batch_bytes + param_bytes, 1)
+
+
+def load_catalog(dryrun_jsonl: str, *, shape: str = "decode_32k",
+                 mesh: str | None = None):
+    """Build (profiles, RooflineLatency) from a dry-run results file.
+
+    Returns per-arch ModelProfiles (with auto-calibrated SLOs) and the
+    provider.  Only archs with an ok record for ``shape`` are included
+    (encoder-only archs are scheduled via their prefill record instead).
+    ``mesh=None`` accepts any single-pod mesh (the --optimized sweep picks a
+    per-arch factorization); the record's data-axis size becomes dp_ref.
+    """
+    import re as _re
+
+    from repro.configs import get_config
+    from repro.launch.specs import INPUT_SHAPES
+
+    records: dict[str, dict] = {}
+    with open(dryrun_jsonl) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") != "ok":
+                continue
+            if mesh is not None:
+                if r.get("mesh") != mesh:
+                    continue
+            elif not _re.fullmatch(r"\d+x\d+", r.get("mesh", "")):
+                continue  # single-pod meshes only
+            if r["shape"] == shape:
+                records[r["arch"]] = r
+            elif r["shape"] == "prefill_32k" and r["arch"] not in records:
+                records.setdefault("_prefill_" + r["arch"], r)
+
+    terms: dict[str, ArchTerms] = {}
+    profiles: dict[str, ModelProfile] = {}
+    for arch, r in list(records.items()):
+        if arch.startswith("_prefill_"):
+            base = arch.removeprefix("_prefill_")
+            if base in records:
+                continue
+            arch = base
+        cfg = get_config(arch)
+        rf = r["roofline"]
+        b_ref = INPUT_SHAPES[r["shape"]]["global_batch"]
+        seq = INPUT_SHAPES[r["shape"]]["seq_len"]
+        t = ArchTerms(
+            compute_ref=max(rf["compute_s"], 0.0),
+            memory_ref=max(rf["memory_s"], 0.0),
+            collective_ref=max(rf["collective_s"], 0.0),
+            b_ref=b_ref,
+            alpha=_kv_alpha(cfg, seq, b_ref),
+            dp_ref=int(r["mesh"].split("x")[0]),
+        )
+        terms[arch] = t
+    provider = RooflineLatency(terms)
+    for arch in terms:
+        prof = ModelProfile(
+            name=arch, slo_ms=1.0, flops_per_req=0.0, weight_mb=0.0,
+            act_mb_per_req=0.0, par1=1.0, par_exp=0.0, t0_ms=T0_MS,
+            l2_util_base=0.5)
+        # paper convention: SLO = 2x solo latency at the calibration batch
+        solo = provider.latency_ms(prof, 32, 1.0)
+        profiles[arch] = dataclasses.replace(prof, slo_ms=2.0 * solo)
+    return profiles, provider

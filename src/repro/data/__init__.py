@@ -1,0 +1,4 @@
+"""Data substrate: synthetic token pipeline + serving request workloads."""
+from repro.data.pipeline import SyntheticLM, token_batches
+
+__all__ = ["SyntheticLM", "token_batches"]

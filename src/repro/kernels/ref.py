@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None):
+    """q: (B, H, S, Dh); k/v: (B, Hkv, S, Dh)."""
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *,
+                         window: int | None = None):
+    """q: (B, H, Dh); caches: (B, S, Hkv, Dh); lengths: (B,) valid entries."""
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k_cache, rep, axis=2)          # (B, S, H, Dh)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= lengths[:, None] - window
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(xh, dt, a, bmat, cmat, h0=None):
+    """Sequential (non-chunked) SSD recurrence — the exact reference.
+
+    xh: (B, S, H, P); dt: (B, S, H); a: (H,); bmat/cmat: (B, S, N);
+    h0: (B, H, N, P) or None.  Returns (y, h_final) in float32.
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a[None, :])                      # (B, H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", b_t, dt_t,
+                         x_t.astype(jnp.float32))
+        h_new = decay[:, :, None, None] * hprev + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, h_new)
+        return h_new, y_t
+
+    xs = (xh.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          bmat.swapaxes(0, 1).astype(jnp.float32),
+          cmat.swapaxes(0, 1).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_final
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B, S, W) float32; h0: (B, W) or None.  Returns (h_seq, h_last).
+    """
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h_new = a_t * h + b_t
+        return h_new, h_new
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), h_last

@@ -1,0 +1,85 @@
+"""Multi-model serving driver: the paper's scheduler over tpu-lets.
+
+Takes a dry-run results file (launch/dryrun.py), derives each architecture's
+roofline L(b, p) table, and runs Elastic Partitioning (Alg. 1) to place the
+requested model mix onto pod partitions (tpu-lets).  Prints the placement
+plan: per-pod partitioning, per-model batch size / duty cycle / estimated
+step latency, and the minimum pods needed.
+
+Usage:
+  python -m repro.launch.serve --results results/dryrun.jsonl \
+      --rates yi-9b=400,chatglm3-6b=800,mamba2-780m=2000 --pods 4
+  python -m repro.launch.serve --results results/dryrun.jsonl --max-scale \
+      --rates yi-9b=1,chatglm3-6b=1
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.elastic import ElasticPartitioning
+from repro.core.hardware import AcceleratorSpec, ClusterSpec
+from repro.core.tpulets import load_catalog
+
+#: One 16x16 v5e pod treated as a single partitionable "device".
+V5E_POD = AcceleratorSpec(name="v5e-pod-16x16", peak_tflops=197.0 * 256,
+                          hbm_gbs=819.0 * 256, hbm_gb=16.0 * 256,
+                          ici_gbs=50.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", required=True,
+                    help="dry-run JSONL (single-pod)")
+    ap.add_argument("--rates", required=True,
+                    help="comma list arch=req_per_s")
+    ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--max-scale", action="store_true",
+                    help="report the max schedulable multiple of --rates")
+    args = ap.parse_args()
+
+    profiles, provider = load_catalog(args.results)
+    rates = {}
+    for part in args.rates.split(","):
+        arch, r = part.split("=")
+        if arch not in profiles:
+            raise SystemExit(
+                f"{arch}: no decode/prefill record in {args.results} "
+                f"(have: {sorted(profiles)})")
+        rates[arch.strip()] = float(r)
+
+    cluster = ClusterSpec(accelerator=V5E_POD, n_devices=args.pods)
+    sched = ElasticPartitioning(profiles, cluster=cluster, lat=provider)
+
+    print(f"== tpu-let serving plan: {args.pods} pod(s), "
+          f"{len(rates)} model(s) ==")
+    for arch, prof in sorted(profiles.items()):
+        if arch in rates:
+            print(f"  {arch:<20} SLO={prof.slo_ms:7.2f} ms  "
+                  f"L(32,pod)={provider.latency_ms(prof, 32, 1.0):7.2f} ms  "
+                  f"rate={rates[arch]:.0f}/s")
+    if args.max_scale:
+        lam = sched.max_scale(rates, hi=1 << 16)
+        print(f"max schedulable scale: {lam:.1f}x "
+              f"(total {lam * sum(rates.values()):.0f} req/s)")
+        rates = {m: r * lam * 0.99 for m, r in rates.items()}
+
+    res = sched.schedule(rates)
+    print(f"schedulable: {res.schedulable}  unplaced: {res.unplaced}")
+    for gpu in res.gpus:
+        parts = []
+        for let in gpu.lets:
+            n_chips = int(round(let.size / 100 * 256))
+            if let.is_free:
+                parts.append(f"[{let.size}% = {n_chips} chips: free]")
+            else:
+                ass = "; ".join(
+                    f"{a.model} r={a.rate:.0f}/s b={a.batch} "
+                    f"duty={a.duty_ms:.1f}ms L={a.est_latency_ms:.1f}ms"
+                    for a in let.assignments)
+                parts.append(f"[{let.size}% = {n_chips} chips: {ass}]")
+        print(f"  pod {gpu.gpu_id}: " + " ".join(parts))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

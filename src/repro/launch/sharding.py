@@ -1,0 +1,207 @@
+"""GSPMD sharding rules for every parameter / batch / cache leaf.
+
+Policy (DESIGN.md §4):
+  * tensor parallelism on the ``model`` axis: attention heads, FFN hidden,
+    experts, vocab;
+  * data parallelism on ``('pod', 'data')``: batch dims;
+  * FSDP (ZeRO-3 style) on ``data`` for training and for the very large
+    serving configs (``cfg.fsdp_serving``): weight d_model rows sharded on
+    ``data``; XLA all-gathers per layer inside the scan;
+  * GQA KV with few heads: shard Hkv on ``model`` when divisible, else shard
+    head_dim (contracting-dim sharding -> psum'd logits), else replicate.
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis — nothing here can fail to lower.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= _axis_size(mesh, a)
+    else:
+        size = _axis_size(mesh, axis)
+    return size > 1 and dim % size == 0
+
+
+def _maybe(dim: int, mesh, axis):
+    """axis if it divides dim (else None)."""
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"[{p.idx}]")
+    return out
+
+
+def param_spec_for(names: list[str], shape: tuple[int, ...], mesh,
+                   cfg: ModelConfig, fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    name = names[-1]
+    stacked = names[0] == "layers" and not names[1].startswith("[")
+    off = 1 if stacked else 0          # leading layer-stack dim
+    d = [None] * len(shape)
+
+    def set_dim(i, axis):
+        if axis is not None and _fits(shape[i], mesh, axis):
+            d[i] = axis
+
+    fs = "data" if fsdp else None
+    in_moe = "moe" in names
+
+    if name == "tok":                         # (V, D)
+        set_dim(0, "model")
+        set_dim(1, fs)
+    elif name == "head" and len(shape) == 2:  # (D, V)
+        set_dim(0, fs)
+        set_dim(1, "model")
+    elif name == "wq":                        # (D, H, Dh)
+        set_dim(off + 0, fs)
+        set_dim(off + 1, "model")
+    elif name in ("wk", "wv"):                # (D, Hkv, Dh)
+        set_dim(off + 0, fs)
+        if _fits(shape[off + 1], mesh, "model"):
+            set_dim(off + 1, "model")
+        # else: replicate heads over 'model' — the projection is tiny and a
+        # head_dim (contracting) shard makes GSPMD replicate the k/v
+        # activations per layer ("involuntary full rematerialization"),
+        # blowing up train memory (§Perf pair A).
+    elif name == "wo":                        # (H, Dh, D)
+        set_dim(off + 0, "model")
+        set_dim(off + 2, fs)
+    elif name in ("w_gate", "w_up") and in_moe and len(shape) - off == 3:
+        # expert weights (E, D, F): expert parallel
+        set_dim(off + 0, "model")
+        set_dim(off + 1, fs)
+    elif name == "w_down" and in_moe and len(shape) - off == 3:
+        set_dim(off + 0, "model")
+        set_dim(off + 2, fs)
+    elif name in ("w_gate", "w_up"):          # (D, F) mlp / rglru gate
+        set_dim(off + 0, fs)
+        set_dim(off + 1, "model")
+    elif name == "w_down":                    # (F, D)
+        set_dim(off + 0, "model")
+        set_dim(off + 1, fs)
+    elif name == "router":                    # (D, E) — replicated (small)
+        pass
+    elif name in ("w_z", "w_x"):              # ssm/rglru (D, Di|W)
+        set_dim(off + 0, fs)
+        set_dim(off + 1, "model")
+    elif name == "w_dt":                      # (D, H)
+        set_dim(off + 1, "model")
+    elif name == "w_bc":                      # (D, 2N) — replicated
+        pass
+    elif name == "conv":                      # (K, Di|W)
+        set_dim(off + 1, "model")
+    elif name in ("a_log", "dt_bias", "d_skip", "lam"):  # (H,) / (W,)
+        set_dim(off + 0, "model")
+    elif name in ("w_r", "w_i"):              # (W, W) rglru gates
+        set_dim(off + 0, "model")             # contracting dim
+    elif name == "w_out":                     # (Di|W, D)
+        set_dim(off + 0, "model")
+        set_dim(off + 1, fs)
+    elif name in ("scale", "bias"):           # norms — replicated
+        pass
+    return P(*d)
+
+
+def param_shardings(cfg: ModelConfig, params_tree, mesh, *, fsdp: bool):
+    """NamedSharding pytree matching ``params_tree`` (shapes or arrays)."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        spec = param_spec_for(names, leaf.shape, mesh, cfg, fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def batch_shardings(cfg: ModelConfig, batch_tree, mesh):
+    """Shard every batch leaf's leading (batch) dim over the dp axes."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        axis = dp if _fits(b, mesh, dp) else None
+        spec = P(axis, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree, mesh):
+    """Decode-cache shardings.
+
+    Stacked attention caches are (L, B, S, Hkv, Dh); hybrid list caches are
+    (B, S, Hkv, Dh).  SSM states (L, B, H, N, P) shard heads on model;
+    RG-LRU h (B, W) shards W on model.
+    """
+    dp = dp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name == "len":
+            return NamedSharding(mesh, P())
+        stacked = "[" not in "".join(names[:2])  # stacked pytree (scan archs)
+        off = 1 if stacked else 0
+        shape = leaf.shape
+        d = [None] * leaf.ndim
+
+        def set_dim(i, axis):
+            if i < leaf.ndim and axis is not None and _fits(shape[i], mesh, axis):
+                d[i] = axis
+
+        if name in ("k", "v"):
+            set_dim(off + 0, dp)            # batch
+            if _fits(shape[off + 2], mesh, "model"):
+                set_dim(off + 2, "model")   # kv heads
+            else:
+                set_dim(off + 3, "model")   # head_dim fallback
+        elif name == "ssm":                 # (B, H, N, P)
+            set_dim(off + 0, dp)
+            set_dim(off + 1, "model")
+        elif name == "conv":                # (B, K-1, Di|W)
+            set_dim(off + 0, dp)
+            set_dim(off + 2, "model")
+        elif name == "h":                   # (B, W)
+            set_dim(off + 0, dp)
+            set_dim(off + 1, "model")
+        return NamedSharding(mesh, P(*d))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def opt_shardings(param_sh, mesh):
+    """Optimizer-state shardings: moments follow params, step replicated."""
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,94 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) combo.
+
+No device allocation ever happens here — everything is eval_shape /
+ShapeDtypeStruct, so the full-size configs (up to 480B params) are exercised
+only structurally, exactly as the dry-run requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+#: The four assigned input shapes.
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode_long", seq_len=524288, global_batch=1),
+}
+
+#: Sliding window used by full-attention archs for long_500k decode.
+LONG_DECODE_WINDOW = 4096
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Whether this (arch x shape) combination runs, and why not if skipped.
+
+    Skips per DESIGN.md §Arch-applicability: encoder-only archs have no
+    decode step.  Full-attention archs run long_500k via the sliding-window
+    variant (so they are NOT skipped).
+    """
+    info = INPUT_SHAPES[shape_name]
+    if info["kind"].startswith("decode") and not cfg.has_decoder:
+        return False, "encoder-only: no autoregressive decode"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training/prefill batch ShapeDtypeStructs."""
+    if cfg.arch_type == "audio":
+        return {
+            "frame_embeds": sds((batch, seq, cfg.d_model), jnp.bfloat16),
+            "labels": sds((batch, seq), jnp.int32),
+        }
+    if cfg.arch_type == "vlm":
+        n_patch = min(cfg.n_frontend_tokens, seq // 4)
+        return {
+            "tokens": sds((batch, seq - n_patch), jnp.int32),
+            "patch_embeds": sds((batch, n_patch, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": sds((batch, seq), jnp.int32)}
+
+
+def decode_window(cfg: ModelConfig, shape_name: str) -> int | None:
+    """Ring-buffer window for the decode cache (None = dense cache)."""
+    if shape_name != "long_500k":
+        return None
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return None  # recurrent state / local windows are already O(1)
+    return LONG_DECODE_WINDOW  # sliding-window variant for full-attention
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str):
+    """Returns (step_kind, specs) where specs matches the step's signature.
+
+    step kinds: "train" -> (batch,), "prefill" -> (batch, cache),
+    "decode" -> (cache, tokens).
+    """
+    info = INPUT_SHAPES[shape_name]
+    model = Model(arch_cfg)
+    batch, seq = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    if kind == "train":
+        return "train", (batch_specs(arch_cfg, batch, seq),)
+    if kind == "prefill":
+        if not arch_cfg.has_decoder:
+            # encoder-only: prefill is a plain full forward (no cache)
+            return "encode", (batch_specs(arch_cfg, batch, seq),)
+        cache = model.cache_shapes(batch, seq)
+        return "prefill", (batch_specs(arch_cfg, batch, seq), cache)
+    # decode shapes
+    window = decode_window(arch_cfg, shape_name)
+    cache = model.cache_shapes(batch, seq, window=window)
+    tokens = sds((batch, 1), jnp.int32)
+    return "decode", (cache, tokens)

@@ -1,0 +1,86 @@
+"""Training driver.
+
+On this CPU container it runs reduced ("smoke"/"mini") variants end-to-end;
+on a real pod the same step function lowers against the production mesh (see
+launch/dryrun.py which proves every full config compiles).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --preset mini \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import token_batches
+from repro.models import Model
+from repro.training import OptimConfig, train_loop
+
+
+def mini_config(arch_id: str):
+    """~100M-param member of the same family (for the e2e training demo)."""
+    cfg = get_config(arch_id)
+    upd = dict(
+        name=cfg.name + "-mini",
+        n_layers=min(cfg.n_layers, 8),
+        d_model=512,
+        vocab_size=min(cfg.vocab_size, 32_000),
+        n_heads=min(cfg.n_heads, 8) if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        d_head=64 if cfg.n_heads else 0,
+        d_ff=min(cfg.d_ff, 2048) if cfg.d_ff else 0,
+        moe_d_ff=min(cfg.moe_d_ff, 1024) if cfg.moe_d_ff else 0,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_d_state=min(cfg.ssm_d_state, 64) if cfg.ssm_d_state else 0,
+        ssm_headdim=64 if cfg.arch_type == "ssm" else cfg.ssm_headdim,
+        ssm_chunk=64,
+        lru_width=512 if cfg.lru_width else 0,
+        local_window=min(cfg.local_window, 256),
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 32),
+    )
+    return dataclasses.replace(cfg, **upd)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-9b")
+    ap.add_argument("--preset", choices=("smoke", "mini"), default="mini")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = (mini_config(args.arch) if args.preset == "mini"
+           else get_smoke_config(args.arch))
+    if cfg.arch_type == "audio":
+        raise SystemExit("use examples/train_audio.py for encoder training")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    batches = token_batches(cfg.vocab_size, args.batch, args.seq, args.steps)
+    opt = OptimConfig(lr=args.lr, warmup_steps=min(50, args.steps // 4),
+                      total_steps=args.steps)
+    params, _, hist = train_loop(model, params, batches, opt, log_every=10)
+    uniform = math.log(cfg.vocab_size)
+    final = hist[-1]["loss"] if hist else float("nan")
+    print(f"uniform={uniform:.3f} final={final:.3f} "
+          f"({'learned' if final < uniform - 0.3 else 'NOT LEARNING'})")
+    if args.checkpoint_dir:
+        from repro.checkpoint import save_checkpoint
+        path = save_checkpoint(args.checkpoint_dir, params, step=args.steps)
+        print(f"checkpoint: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+"""JAX model zoo: dense / MoE / SSM / hybrid / VLM / audio backbones."""
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+__all__ = ["Model", "ModelConfig"]

@@ -1,0 +1,26 @@
+"""Modality frontends — STUBS per the assignment carve-out.
+
+[audio] and [vlm] architectures specify the transformer backbone only; the
+mel-spectrogram/conv feature extractor (audio) and the ViT/projector (VLM)
+are not implemented.  ``input_specs()`` supplies pre-computed frame/patch
+embeddings of the right shape, and these helpers document that contract and
+provide random stand-ins for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def audio_frame_embeddings(key, batch: int, n_frames: int, cfg: ModelConfig,
+                           dtype=jnp.bfloat16):
+    """Stand-in for wav2vec2/HuBERT conv-extractor output: (B, T, D)."""
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model)).astype(dtype)
+
+
+def vision_patch_embeddings(key, batch: int, n_patches: int, cfg: ModelConfig,
+                            dtype=jnp.bfloat16):
+    """Stand-in for InternViT+projector output: (B, N_patch, D)."""
+    return jax.random.normal(key, (batch, n_patches, cfg.d_model)).astype(dtype)

@@ -1,0 +1,246 @@
+"""Shared model layers: norms, rotary embeddings, GQA attention, MLPs.
+
+Everything is a pure function over explicit parameter pytrees (no framework
+dependency); initializers return nested dicts of jnp arrays.  Attention comes
+in three execution styles:
+
+  * ``attention_full``      — materialized scores; small sequences.
+  * ``attention_blockwise`` — lax.scan over KV blocks with online softmax
+                              (the pure-jnp flash attention; also the oracle
+                              for kernels/flash_attention.py).
+  * ``attention_decode``    — one-query-token attention against a KV cache.
+
+All support GQA (n_kv_heads <= n_heads) and optional sliding windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- norms ----
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    return rmsnorm_init, rmsnorm
+
+
+# ----------------------------------------------------------------- rope ----
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "wq": (jax.random.normal(kq, (d_model, n_heads, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads, head_dim, d_model)) * s).astype(dtype),
+    }
+
+
+def _repeat_kv(k, n_heads: int):
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh) by group broadcast."""
+    b, s, hkv, dh = k.shape
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, dh))
+    return k.reshape(b, s, n_heads, dh)
+
+
+def attention_full(q, k, v, *, causal: bool, window: int | None = None,
+                   q_offset: int = 0):
+    """Materialized-scores attention.  q: (B,Sq,H,Dh), k/v: (B,Skv,Hkv,Dh).
+
+    The scores tensor is explicitly pinned to (batch->dp, heads->model):
+    GSPMD cannot propagate shardings through jax.checkpoint remat bodies and
+    otherwise replicates the (B,H,S,S) scores on every device ("involuntary
+    full rematerialization" — §Perf pair A).
+    """
+    from repro.models.shard_ctx import constrain
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = constrain(logits, "dp", "model", None, None)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = constrain(probs, "dp", "model", None, None)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return constrain(out.astype(q.dtype), "dp", None, "model", None)
+
+
+def attention_blockwise(q, k, v, *, causal: bool, window: int | None = None,
+                        block_kv: int = 1024, unroll: bool = False):
+    """Online-softmax attention scanning KV blocks (never builds Sq x Skv).
+
+    Pure-jnp flash attention: the memory high-water mark per step is
+    (B, H, Sq, block_kv).  Used for long prefill; also the reference the
+    Pallas kernel is checked against.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    assert skv % block_kv == 0, (skv, block_kv)
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32) * scale
+    nblk = skv // block_kv
+    kb = k.reshape(b, nblk, block_kv, h, dh)
+    vb = v.reshape(b, nblk, block_kv, h, dh)
+    qpos = jnp.arange(sq)
+
+    from repro.models.shard_ctx import constrain
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kpos = blk
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32))
+        logits = constrain(logits, "dp", "model", None, None)
+        mask = jnp.ones((sq, block_kv), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    kpos_all = jnp.arange(skv).reshape(nblk, block_kv)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpos_all),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,Sq,H,Dh)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len, *, window: int | None = None):
+    """Single-token decode attention, grouped-GQA form.
+
+    q: (B, 1, H, Dh); k_cache/v_cache: (B, S_max, Hkv, Dh); cache_len: (B,)
+    number of valid entries (the new token's K/V must already be written).
+    The KV cache is *never* materialized at full head count — the GQA group
+    dim stays factored so the (huge) cache is read once.
+    """
+    b, _, h, dh = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale  # (B,Hkv,G,1,S)
+    kpos = jnp.arange(smax)
+    valid = kpos[None, :] < cache_len[:, None]
+    if window is not None:
+        valid &= kpos[None, :] >= cache_len[:, None] - window
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- mlp ----
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str,
+             dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(params, x, activation: str):
+    up = x @ params["w_up"]
+    if activation == "swiglu":
+        gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        h = gate.astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------- embeddings --
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": (jax.random.normal(k1, (vocab, d_model)) * 0.02).astype(dtype),
+        "head": (jax.random.normal(k2, (d_model, vocab)) /
+                 math.sqrt(d_model)).astype(dtype),
+    }

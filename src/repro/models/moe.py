@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with static capacity.
+
+TPU-native dispatch (DESIGN.md §hardware-adaptation): instead of the GPU
+pattern (ragged grouped GEMMs), tokens are placed into a *static* per-expert
+buffer (E, C, D) via scatter, experts run as one batched einsum on the MXU,
+and results gather back with routing weights.  Position-within-expert comes
+from a one-hot cumsum — no sorting network, no dynamic shapes, so the whole
+layer lowers cleanly under pjit/GSPMD with experts sharded on the ``model``
+mesh axis (expert parallelism).
+
+Token-choice semantics (deepseek-moe, arctic): each token picks top-k
+experts; tokens beyond an expert's capacity C = ceil(T*k/E * cf) are dropped
+(contribute zero), the standard GShard/Switch behaviour.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, round_up
+from repro.models.layers import mlp, mlp_init
+from repro.models.shard_ctx import constrain, dp_world
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    keys = jax.random.split(key, 6)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(keys[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(keys[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(keys[3], (e, f, d)) * s_out).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(keys[4], d, f * cfg.n_shared_experts,
+                               "swiglu", dtype)
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_init(keys[5], d, cfg.d_ff, "swiglu", dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    # multiple of 128 so the capacity dim shards over the data axes and
+    # stays MXU-aligned (tiny decode batches fall back to 8-alignment).
+    return round_up(max(c, 8), 128 if c >= 128 else 8)
+
+
+def n_dispatch_groups(n_tokens: int) -> int:
+    """Dispatch group count: one group per data shard (GShard semantics).
+
+    Groups make the scatter/gather *local*: operand, updates and indices all
+    shard identically on the group dim, so GSPMD partitions the dispatch
+    with zero cross-device traffic (expert weights are replicated across the
+    data axes already — that's standard expert parallelism).  Falls back to
+    a single group when tokens don't divide (e.g. batch-1 long decode).
+    """
+    g = dp_world()
+    while g > 1 and n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D).  Aux losses returned as (out, aux)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    g = n_dispatch_groups(t)
+    tg = t // g
+    cap = capacity(tg, cfg)
+    xf = constrain(x.reshape(t, d), "dp", None)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                      # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (t * k), mode="drop")
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- grouped dispatch ---------------------------------------------------
+    flat_e = constrain(top_i.reshape(g, tg * k), "dp", None)    # (G, Tg*k)
+    flat_w = top_w.reshape(g, tg * k)
+    oh = constrain(jax.nn.one_hot(flat_e, e, dtype=jnp.int32),
+                   "dp", None, None)                            # (G, Tg*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - 1,
+                              flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)         # OOB -> drop
+
+    src = constrain(
+        jnp.repeat(xf.reshape(g, tg, d), k, axis=1), "dp", None, None)
+
+    def scatter_one(dest_g, src_g):
+        return jnp.zeros((e * cap, d), x.dtype).at[dest_g].set(
+            src_g, mode="drop")
+
+    buf = jax.vmap(scatter_one)(dest, src)                      # (G, E*cap, D)
+    # group dim -> data axes, expert dim -> model axis (expert parallelism):
+    # expert FLOPs spread over the full mesh with a purely local dispatch.
+    buf = constrain(buf.reshape(g, e, cap, d), "dp", "model", None, None)
+
+    # --- expert computation (batched einsum over group x expert) -----------
+    gate = jax.nn.silu(jnp.einsum(
+        "gecd,edf->gecf", buf, params["w_gate"]).astype(jnp.float32))
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = (gate.astype(x.dtype) * up)
+    out_buf = constrain(jnp.einsum("gecf,efd->gecd", h, params["w_down"]),
+                        "dp", "model", None, None)
+    out_flat = out_buf.reshape(g, e * cap, d)
+
+    # --- combine (local per-group gather) -----------------------------------
+    def gather_one(out_g, dest_g):
+        return jnp.take(out_g, jnp.minimum(dest_g, e * cap - 1), axis=0)
+
+    gathered = jax.vmap(gather_one)(out_flat, dest)             # (G, Tg*k, D)
+    gathered = gathered * (keep & (dest < e * cap))[..., None].astype(x.dtype)
+    gathered = constrain(gathered * flat_w[..., None].astype(x.dtype),
+                         "dp", None, None)
+    y = gathered.reshape(t, k, d).sum(axis=1)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xf, "swiglu")
+    if "dense" in params:
+        y = y + mlp(params["dense"], xf, "swiglu")
+    return y.reshape(b, s, d), aux_loss

@@ -1,0 +1,91 @@
+"""Ambient mesh context for in-model sharding constraints.
+
+GSPMD propagation alone mis-places the MoE dispatch tensors (it replicates
+the flattened token-major intermediates across the ``model`` axis, inflating
+per-device traffic by the axis size).  Model code can't take a mesh
+argument everywhere, so launchers set the ambient mesh here and layers pin
+the few load-bearing intermediates with ``constrain``.
+
+No-op when no mesh is set (CPU smoke tests, unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "dp": (), "pin_activations": True}
+
+
+def set_mesh_context(mesh, dp_axes: tuple[str, ...],
+                     pin_activations: bool = True):
+    _CTX["mesh"] = mesh
+    _CTX["dp"] = tuple(dp_axes)
+    _CTX["pin_activations"] = pin_activations
+
+
+def clear_mesh_context():
+    _CTX["mesh"] = None
+    _CTX["dp"] = ()
+    _CTX["pin_activations"] = True
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, dp_axes: tuple[str, ...], pin_activations: bool = True):
+    old = dict(_CTX)
+    set_mesh_context(mesh, dp_axes, pin_activations)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def _resolve(axis, dim: int, mesh):
+    """Map symbolic axis -> mesh axes, dropping non-divisible shardings."""
+    if axis is None:
+        return None
+    ax = _CTX["dp"] if axis == "dp" else axis
+    if not ax:
+        return None
+    size = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        size *= mesh.shape[a]
+    return ax if (size > 1 and dim % size == 0) else None
+
+
+def dp_world() -> int:
+    """Total data-parallel shard count of the ambient mesh (1 if none)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return 1
+    size = 1
+    for a in _CTX["dp"]:
+        size *= mesh.shape[a]
+    return size
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the ambient mesh ('dp' = data axes).
+
+    Usage: constrain(tokens, 'dp', None)  /  constrain(buf, 'model', None, None)
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    assert len(spec) == x.ndim, (spec, x.shape)
+    resolved = [_resolve(a, d, mesh) for a, d in zip(spec, x.shape)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def constrain_act(x, *spec):
+    """Residual-stream pin — required under remat (train/prefill: GSPMD
+    replicates batch otherwise, §Perf A2/A3) but *harmful* for 2D-sharded
+    decode, where GSPMD's own choice (D-sharded activations, local dots,
+    tiny psums) is better.  Launchers disable it via
+    set_mesh_context(pin_activations=False) for decode builds.
+    """
+    if not _CTX["pin_activations"]:
+        return x
+    return constrain(x, *spec)

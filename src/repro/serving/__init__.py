@@ -1,0 +1,4 @@
+"""Serving runtime: rate tracking, periodic rescheduling, executors."""
+from repro.serving.controller import EWMARateTracker, ServingController, PeriodRecord
+
+__all__ = ["EWMARateTracker", "ServingController", "PeriodRecord"]

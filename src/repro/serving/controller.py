@@ -1,0 +1,118 @@
+"""Periodic rescheduling controller (paper §4.1, §5, Fig. 14).
+
+The paper's prototype monitors incoming rates with an exponentially-weighted
+moving average, and every 20 s (chosen so the 10-15 s partition-reorganization
+cost hides inside the window) re-runs elastic partitioning if the rates
+changed enough to either violate SLOs (rate increase) or leave gpu-lets
+underutilized (rate decrease).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable, Mapping
+
+from repro.core.profiles import ModelProfile
+from repro.core.scheduler_base import SchedulerBase, ScheduleResult
+from repro.simulator.cluster import SimConfig, simulate_schedule
+from repro.simulator.events import PoissonArrivals, merge_sorted
+from repro.simulator.metrics import SimMetrics
+
+
+class EWMARateTracker:
+    """Per-model EWMA of observed request rates."""
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = alpha
+        self.rates: dict[str, float] = {}
+
+    def update(self, observed: Mapping[str, float]) -> dict[str, float]:
+        for m, r in observed.items():
+            if m in self.rates:
+                self.rates[m] = self.alpha * r + (1 - self.alpha) * self.rates[m]
+            else:
+                self.rates[m] = r
+        return dict(self.rates)
+
+
+@dataclasses.dataclass
+class PeriodRecord:
+    t_start_s: float
+    ewma_rates: dict[str, float]
+    observed_rates: dict[str, float]
+    rescheduled: bool
+    used_partition_total: int     # sum of occupied gpu-let sizes (%)
+    metrics: SimMetrics
+
+
+class ServingController:
+    """Drives scheduler + simulator period by period (Fig. 14 experiment)."""
+
+    def __init__(self, scheduler: SchedulerBase,
+                 profiles: Mapping[str, ModelProfile],
+                 period_s: float = 20.0,
+                 resched_threshold: float = 0.10,
+                 seed: int = 0):
+        self.scheduler = scheduler
+        self.profiles = dict(profiles)
+        self.period_s = period_s
+        self.resched_threshold = resched_threshold
+        self.tracker = EWMARateTracker()
+        self.schedule: ScheduleResult | None = None
+        self.scheduled_rates: dict[str, float] = {}
+        self.gen = PoissonArrivals(seed=seed)
+
+    def _needs_reschedule(self, rates: Mapping[str, float]) -> bool:
+        if self.schedule is None:
+            return True
+        for m, r in rates.items():
+            old = self.scheduled_rates.get(m, 0.0)
+            base = max(old, 1e-6)
+            if abs(r - old) / base > self.resched_threshold:
+                return True
+        return False
+
+    def run(self, rate_fns: Mapping[str, Callable[[float], float]],
+            horizon_s: float, margin: float = 1.05) -> list[PeriodRecord]:
+        """Simulate ``horizon_s`` seconds of serving with fluctuating rates.
+
+        ``rate_fns[model](t_s)`` gives the instantaneous request rate.  Each
+        period the controller observes arrivals, updates the EWMA, and
+        reschedules when rates moved beyond the threshold.  ``margin``
+        over-provisions the scheduled rate slightly to cover prediction error
+        (the paper notes occasional violations from rate mis-prediction).
+        """
+        records: list[PeriodRecord] = []
+        n_periods = int(horizon_s / self.period_s)
+        period_ms = self.period_s * 1e3
+        for k in range(n_periods):
+            t0 = k * self.period_s
+            # generate this period's arrivals from the true (fluctuating) rate
+            streams = []
+            observed: dict[str, float] = {}
+            for m, fn in rate_fns.items():
+                peak = max(fn(t0 + dt) for dt in
+                           [x * self.period_s / 8 for x in range(9)]) + 1e-9
+                reqs = self.gen.time_varying(
+                    m, lambda t, fn=fn, t0=t0: fn(t0 + t / 1e3), peak,
+                    self.profiles[m].slo_ms, period_ms)
+                observed[m] = len(reqs) / self.period_s
+                streams.append(reqs)
+            ewma = self.tracker.update(observed)
+            resched = self._needs_reschedule(ewma)
+            if resched:
+                target = {m: r * margin for m, r in ewma.items() if r > 0}
+                result = self.scheduler.schedule(target)
+                # keep the old schedule if the new rates are unschedulable
+                if result.schedulable or self.schedule is None:
+                    self.schedule = result
+                    self.scheduled_rates = dict(ewma)
+            reqs = merge_sorted(streams)
+            metrics = simulate_schedule(
+                self.schedule, self.profiles, reqs,
+                SimConfig(horizon_ms=period_ms, acc=self.scheduler.acc))
+            records.append(PeriodRecord(
+                t_start_s=t0, ewma_rates=dict(ewma), observed_rates=observed,
+                rescheduled=resched,
+                used_partition_total=self.schedule.used_partition_total(),
+                metrics=metrics))
+        return records

@@ -1,0 +1,7 @@
+"""Discrete-event simulator of the paper's multi-GPU inference testbed."""
+from repro.simulator.events import PoissonArrivals, Request
+from repro.simulator.cluster import SimConfig, simulate_schedule
+from repro.simulator.metrics import SimMetrics
+
+__all__ = ["PoissonArrivals", "Request", "SimConfig", "SimMetrics",
+           "simulate_schedule"]

@@ -1,0 +1,79 @@
+"""Request arrival processes.
+
+The paper samples inter-arrival times from a Poisson process per model
+(§6.1, citing Treadmill [38]); rate-fluctuation experiments (Fig. 14) use a
+time-varying rate, which we model as an inhomogeneous Poisson process via
+per-interval thinning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    model: str
+    arrival_ms: float
+    slo_ms: float
+    # filled by the simulator:
+    completion_ms: float | None = None
+    dropped: bool = False
+
+    @property
+    def latency_ms(self) -> float | None:
+        if self.completion_ms is None:
+            return None
+        return self.completion_ms - self.arrival_ms
+
+    @property
+    def violated(self) -> bool:
+        if self.dropped:
+            return True
+        return self.completion_ms is not None and self.latency_ms > self.slo_ms
+
+
+class PoissonArrivals:
+    """Generates per-model Poisson request arrivals over a horizon."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def constant(self, model: str, rate_req_s: float, slo_ms: float,
+                 horizon_ms: float, start_ms: float = 0.0) -> list[Request]:
+        if rate_req_s <= 0:
+            return []
+        out = []
+        t = start_ms
+        scale_ms = 1e3 / rate_req_s
+        while True:
+            t += self.rng.exponential(scale_ms)
+            if t >= start_ms + horizon_ms:
+                break
+            out.append(Request(model=model, arrival_ms=t, slo_ms=slo_ms))
+        return out
+
+    def time_varying(self, model: str, rate_fn: Callable[[float], float],
+                     peak_rate: float, slo_ms: float,
+                     horizon_ms: float) -> list[Request]:
+        """Inhomogeneous Poisson via thinning against ``peak_rate``."""
+        if peak_rate <= 0:
+            return []
+        out = []
+        t = 0.0
+        scale_ms = 1e3 / peak_rate
+        while True:
+            t += self.rng.exponential(scale_ms)
+            if t >= horizon_ms:
+                break
+            if self.rng.uniform() < rate_fn(t) / peak_rate:
+                out.append(Request(model=model, arrival_ms=t, slo_ms=slo_ms))
+        return out
+
+
+def merge_sorted(streams: Sequence[list[Request]]) -> list[Request]:
+    reqs = [r for s in streams for r in s]
+    reqs.sort(key=lambda r: r.arrival_ms)
+    return reqs

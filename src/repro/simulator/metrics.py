@@ -1,0 +1,55 @@
+"""SLO/throughput accounting for simulated serving runs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.simulator.events import Request
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    horizon_ms: float
+    total: int = 0
+    completed: int = 0
+    dropped: int = 0
+    slo_violations: int = 0       # completed late + dropped
+    per_model: dict = dataclasses.field(default_factory=dict)
+    busy_ms_per_gpulet: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def violation_rate(self) -> float:
+        return self.slo_violations / self.total if self.total else 0.0
+
+    @property
+    def goodput_req_s(self) -> float:
+        """Requests completed within SLO, per second."""
+        ok = self.completed - (self.slo_violations - self.dropped)
+        return ok / (self.horizon_ms / 1e3) if self.horizon_ms else 0.0
+
+    @property
+    def throughput_req_s(self) -> float:
+        return self.completed / (self.horizon_ms / 1e3) if self.horizon_ms else 0.0
+
+
+def collect(requests: list[Request], horizon_ms: float,
+            busy_ms: dict | None = None) -> SimMetrics:
+    m = SimMetrics(horizon_ms=horizon_ms)
+    m.busy_ms_per_gpulet = busy_ms or {}
+    for r in requests:
+        m.total += 1
+        pm = m.per_model.setdefault(
+            r.model, dict(total=0, violations=0, dropped=0, completed=0))
+        pm["total"] += 1
+        if r.dropped:
+            m.dropped += 1
+            m.slo_violations += 1
+            pm["dropped"] += 1
+            pm["violations"] += 1
+            continue
+        if r.completion_ms is not None:
+            m.completed += 1
+            pm["completed"] += 1
+            if r.violated:
+                m.slo_violations += 1
+                pm["violations"] += 1
+    return m

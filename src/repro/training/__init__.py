@@ -1,0 +1,6 @@
+"""Training substrate: AdamW, schedules, the train step, and the loop."""
+from repro.training.optim import adamw_init, adamw_update, OptimConfig
+from repro.training.train import make_train_step, train_loop
+
+__all__ = ["OptimConfig", "adamw_init", "adamw_update", "make_train_step",
+           "train_loop"]

@@ -1,0 +1,50 @@
+"""The train step and loop."""
+from __future__ import annotations
+
+import functools
+import time
+from collections.abc import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optim import OptimConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: OptimConfig,
+                    donate: bool = True) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (p, s, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch))(params)
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(model: Model, params, batches: Iterable,
+               opt_cfg: OptimConfig | None = None,
+               log_every: int = 10,
+               log_fn=print):
+    """Simple single-host loop used by examples and integration tests."""
+    opt_cfg = opt_cfg or OptimConfig()
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (i + 1) % log_every == 0:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            log_fn(f"step {i+1}: loss={loss:.4f} "
+                   f"({dt/log_every*1e3:.0f} ms/step)")
+            history.append(dict(step=i + 1, loss=loss,
+                                ms_per_step=dt / log_every * 1e3))
+            t0 = time.perf_counter()
+    return params, opt_state, history

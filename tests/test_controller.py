@@ -1,0 +1,32 @@
+"""Serving controller: EWMA tracking + periodic rescheduling (Fig. 14)."""
+import math
+
+from repro.core import ElasticPartitioning, calibrate_profiles, fit_default_model
+from repro.serving import EWMARateTracker, ServingController
+
+PROFS = calibrate_profiles()
+INTF, _ = fit_default_model(PROFS)
+
+
+def test_ewma():
+    t = EWMARateTracker(alpha=0.5)
+    t.update({"a": 100.0})
+    t.update({"a": 200.0})
+    assert t.rates["a"] == 150.0
+
+
+def test_controller_adapts_partitions():
+    sched = ElasticPartitioning(PROFS, intf_model=INTF)
+    ctrl = ServingController(sched, PROFS, seed=3)
+
+    def wave(t):
+        return 120.0 + 500.0 * math.exp(-((t - 150) / 60) ** 2)
+
+    recs = ctrl.run({"res": wave, "goo": lambda t: 80.0}, horizon_s=300)
+    assert len(recs) == 15
+    used = [r.used_partition_total for r in recs]
+    assert max(used) > used[0]            # scaled up for the wave
+    tot = sum(r.metrics.total for r in recs)
+    viol = sum(r.metrics.slo_violations for r in recs)
+    assert viol / tot < 0.03
+    assert any(r.rescheduled for r in recs[1:])

@@ -1,0 +1,52 @@
+"""gpu-let split/merge/partitioning invariants."""
+import pytest
+
+from repro.core.gpulet import (GpuLet, GpuState, enumerate_gpu_partitionings,
+                               fresh_cluster, revert_split, split,
+                               valid_partitioning)
+
+
+def test_fresh_cluster():
+    gpus = fresh_cluster(4)
+    assert len(gpus) == 4
+    assert all(valid_partitioning(g) for g in gpus)
+    assert all(g.lets[0].size == 100 for g in gpus)
+
+
+@pytest.mark.parametrize("want,expect", [(20, 20), (25, 40), (50, 50),
+                                         (55, 60), (80, 80)])
+def test_split_rounds_up(want, expect):
+    gpu = fresh_cluster(1)[0]
+    a, b = split(gpu, want)
+    assert a.size == expect and b.size == 100 - expect
+    assert valid_partitioning(gpu)
+
+
+def test_split_then_revert():
+    gpu = fresh_cluster(1)[0]
+    split(gpu, 40)
+    whole = revert_split(gpu)
+    assert whole.size == 100 and len(gpu.lets) == 1
+    assert valid_partitioning(gpu)
+
+
+def test_cannot_split_occupied():
+    gpu = fresh_cluster(1)[0]
+    gpu.lets[0].assignments.append(object())
+    with pytest.raises(AssertionError):
+        split(gpu, 40)
+
+
+def test_partner():
+    gpu = fresh_cluster(1)[0]
+    a, b = split(gpu, 20)
+    assert gpu.partner_of(a) is b and gpu.partner_of(b) is a
+
+
+def test_enumerate_partitionings_matches_paper():
+    """Paper: '4 GPUs which can be partitioned into 4 cases'."""
+    cases = enumerate_gpu_partitionings()
+    assert len(cases) == 4
+    assert (100,) in cases
+    for c in cases[1:]:
+        assert sum(c) == 100

@@ -1,0 +1,43 @@
+"""Interference ground truth + the paper's linear predictor (§4.4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibrate_profiles, fit_default_model
+from repro.core.interference import (profile_pairs_dataset, solo_features,
+                                     true_interference_factors)
+
+PROFS = calibrate_profiles()
+NAMES = sorted(PROFS)
+
+
+@given(a=st.sampled_from(NAMES), b=st.sampled_from(NAMES),
+       pa=st.sampled_from([0.2, 0.4, 0.5, 0.6, 0.8]),
+       ba=st.sampled_from([2, 8, 32]), bb=st.sampled_from([2, 8, 32]))
+@settings(max_examples=100, deadline=None)
+def test_factors_at_least_one_and_deterministic(a, b, pa, ba, bb):
+    pb = round(1.0 - pa, 2)
+    f1 = true_interference_factors(PROFS[a], pa, ba, PROFS[b], pb, bb)
+    f2 = true_interference_factors(PROFS[a], pa, ba, PROFS[b], pb, bb)
+    assert f1 == f2                      # deterministic
+    assert f1[0] >= 1.0 and f1[1] >= 1.0
+
+
+@given(name=st.sampled_from(NAMES),
+       p=st.sampled_from([0.2, 0.5, 0.8, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_solo_features_bounded(name, p):
+    l2, mem = solo_features(PROFS[name], p)
+    assert 0.0 <= l2 <= 1.0 and 0.0 <= mem <= 1.0
+
+
+def test_cdf_matches_fig6():
+    _, targs, _ = profile_pairs_dataset(PROFS)
+    ov = targs - 1.0
+    assert np.mean(ov < 0.18) >= 0.85          # "90% below 18%"
+    assert np.percentile(ov, 99) > 0.15        # long tail exists
+
+
+def test_predictor_error_matches_fig9():
+    _, stats = fit_default_model(PROFS)
+    assert stats["p90_rel_err"] <= 0.11        # paper: 10.26%
+    assert stats["p95_rel_err"] <= 0.14        # paper: 13.98%

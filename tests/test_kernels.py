@@ -1,0 +1,117 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes and dtypes per kernel, assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.key(0)
+
+
+def tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh", [
+    (2, 4, 2, 256, 64),
+    (1, 8, 2, 512, 128),
+    (2, 4, 4, 256, 64),     # MHA
+    (1, 4, 1, 512, 64),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, hkv, s, dh, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, dh), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1, 512, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh,window", [
+    (2, 8, 2, 512, 64, None),
+    (1, 4, 1, 1024, 128, None),
+    (2, 16, 8, 512, 64, 256),
+    (3, 4, 4, 256, 64, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, hkv, s, dh, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    lens = (jnp.arange(b, dtype=jnp.int32) * 131 + s // 2) % s + 1
+    out = decode_attention(q, kc, vc, lens, window=window, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lens, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 512, 4, 64, 128, 128),
+    (1, 256, 2, 32, 64, 64),
+    (2, 128, 3, 64, 128, 128),   # single chunk
+])
+def test_ssd_scan(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    y = ssd_scan(xh, dt, a, bm, cm, chunk=chunk, interpret=True)
+    want, _ = ref.ssd_scan_ref(xh, dt, a, bm, cm)
+    scale = np.abs(np.asarray(want)).max() + 1e-9
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(want) / scale,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,w,blk", [
+    (2, 512, 256, 128),
+    (1, 256, 2560, 256),
+    (3, 128, 128, 128),
+])
+def test_rglru_scan(b, s, w, blk):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w))) * 0.2 + 0.8
+    bb = jax.random.normal(ks[1], (b, s, w)) * 0.1
+    h = rglru_scan(a, bb, block_t=blk, interpret=True)
+    want, _ = ref.rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_jnp_matches_pallas_interpret():
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, impl="jnp")
+    b = ops.flash_attention(q, k, v, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)

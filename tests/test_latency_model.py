@@ -1,0 +1,85 @@
+"""Latency model L(b, p): calibration + invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibrate_profiles
+from repro.core.latency import (AnalyticGPULatency, BATCH_SIZES,
+                                PARTITION_SIZES)
+from repro.core.profiles import SLO_CALIBRATION_BATCH
+
+PROFS = calibrate_profiles()
+LAT = AnalyticGPULatency()
+
+
+@pytest.mark.parametrize("name", sorted(PROFS))
+def test_calibration_matches_paper_slo(name):
+    """Section 6.1: SLO = 2x solo latency at batch 32 on a full GPU."""
+    prof = PROFS[name]
+    lat = LAT.latency_ms(prof, SLO_CALIBRATION_BATCH, 1.0)
+    assert lat == pytest.approx(prof.slo_ms / 2.0, rel=0.01)
+
+
+@given(name=st.sampled_from(sorted(PROFS)),
+       b=st.sampled_from(BATCH_SIZES),
+       p1=st.sampled_from(PARTITION_SIZES),
+       p2=st.sampled_from(PARTITION_SIZES))
+@settings(max_examples=200, deadline=None)
+def test_latency_nonincreasing_in_partition(name, b, p1, p2):
+    prof = PROFS[name]
+    lo, hi = min(p1, p2), max(p1, p2)
+    assert LAT.latency_ms(prof, b, hi / 100) <= \
+        LAT.latency_ms(prof, b, lo / 100) + 1e-9
+
+
+@given(name=st.sampled_from(sorted(PROFS)),
+       p=st.sampled_from(PARTITION_SIZES),
+       b1=st.sampled_from(BATCH_SIZES),
+       b2=st.sampled_from(BATCH_SIZES))
+@settings(max_examples=200, deadline=None)
+def test_latency_increasing_in_batch(name, p, b1, b2):
+    prof = PROFS[name]
+    lo, hi = min(b1, b2), max(b1, b2)
+    assert LAT.latency_ms(prof, hi, p / 100) >= \
+        LAT.latency_ms(prof, lo, p / 100) - 1e-9
+
+
+@given(name=st.sampled_from(sorted(PROFS)))
+@settings(max_examples=20, deadline=None)
+def test_knee_is_valid_partition(name):
+    knee = LAT.max_efficient_partition(PROFS[name])
+    assert knee in PARTITION_SIZES
+
+
+@given(name=st.sampled_from(sorted(PROFS)),
+       rate=st.floats(min_value=1.0, max_value=5000.0))
+@settings(max_examples=100, deadline=None)
+def test_min_required_partition_sustains_rate(name, rate):
+    prof = PROFS[name]
+    p = LAT.min_required_partition(prof, rate)
+    if p is not None:
+        assert LAT.max_rate(prof, p / 100) >= rate
+        # minimality: next smaller size can't sustain it
+        smaller = [s for s in PARTITION_SIZES if s < p]
+        if smaller:
+            assert LAT.max_rate(prof, smaller[-1] / 100) < rate
+
+
+@given(name=st.sampled_from(sorted(PROFS)),
+       rates=st.lists(st.floats(min_value=1, max_value=300), min_size=1,
+                      max_size=4),
+       p=st.sampled_from(PARTITION_SIZES))
+@settings(max_examples=100, deadline=None)
+def test_duty_cycle_feasible_invariants(name, rates, p):
+    """Feasible duty cycles satisfy the paper's two constraints (Fig. 1)."""
+    profs = [PROFS[name]] * len(rates)
+    entries = list(zip(profs, rates))
+    ok, duty, batches = LAT.duty_cycle_feasible(entries, p / 100)
+    if ok:
+        assert len(batches) == len(entries)
+        exec_sum = sum(LAT.latency_ms(pr, b, p / 100)
+                       for (pr, _), b in zip(entries, batches))
+        assert exec_sum <= duty + 1e-9
+        for (pr, _), b in zip(entries, batches):
+            assert duty + LAT.latency_ms(pr, b, p / 100) <= pr.slo_ms + 1e-9

@@ -1,0 +1,104 @@
+"""Scheduler behaviour + property tests (all four schedulers)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ElasticPartitioning, GuidedSelfTuning,
+                        IdealScheduler, SquishyBinPacking,
+                        calibrate_profiles, fit_default_model)
+from repro.core.gpulet import valid_partitioning
+from repro.core.scenarios import APPLICATIONS, REQUEST_SCENARIOS
+
+PROFS = calibrate_profiles()
+INTF, _ = fit_default_model(PROFS)
+MODELS = sorted(PROFS)
+
+
+def check_result_invariants(sched, rates, res):
+    # every GPU's partitioning is structurally valid
+    for gpu in res.gpus:
+        assert valid_partitioning(gpu)
+    by_model = res.assignments_by_model()
+    if res.schedulable:
+        # full coverage of requested rates (rates below the scheduler's
+        # noise floor are legitimately ignored)
+        for m, r in rates.items():
+            if r > 1e-6:
+                assert by_model.get(m, 0.0) >= r * 0.999, (m, r, by_model)
+    # every assignment respects its SLO with the scheduled duty cycle
+    for let in res.gpulets:
+        for a in let.assignments:
+            slo = PROFS[a.model].slo_ms
+            assert a.duty_ms + a.est_latency_ms <= slo * 1.001
+    # never claims more than the requested rate (no phantom assignments)
+    for m, got in by_model.items():
+        assert got <= rates.get(m, 0.0) * 1.001 + 1e-6
+
+
+rate_strategy = st.dictionaries(
+    st.sampled_from(MODELS),
+    st.floats(min_value=0.0, max_value=800.0),
+    min_size=1, max_size=5)
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: SquishyBinPacking(PROFS),
+    lambda: GuidedSelfTuning(PROFS),
+    lambda: ElasticPartitioning(PROFS),
+    lambda: ElasticPartitioning(PROFS, intf_model=INTF),
+])
+def test_table5_scenarios_schedulable(mk):
+    """All schedulers admit the paper's base Table-5 rates on 4 GPUs."""
+    sched = mk()
+    for name, rates in REQUEST_SCENARIOS.items():
+        res = sched.schedule({m: r for m, r in rates.items() if r > 0})
+        check_result_invariants(sched, rates, res)
+        assert res.schedulable, (sched.name, name, res.unplaced)
+
+
+@given(rates=rate_strategy)
+@settings(max_examples=60, deadline=None)
+def test_elastic_invariants_random_workloads(rates):
+    sched = ElasticPartitioning(PROFS, intf_model=INTF)
+    res = sched.schedule(rates)
+    check_result_invariants(sched, rates, res)
+
+
+@given(rates=rate_strategy)
+@settings(max_examples=30, deadline=None)
+def test_sbp_invariants_random_workloads(rates):
+    sched = SquishyBinPacking(PROFS)
+    res = sched.schedule(rates)
+    check_result_invariants(sched, rates, res)
+
+
+@given(rates=rate_strategy)
+@settings(max_examples=20, deadline=None)
+def test_elastic_dominates_sbp_schedulability(rates):
+    """Partitioning only adds options: what SBP admits, elastic must too
+    (checked at a slightly reduced rate to absorb heuristic ordering)."""
+    if SquishyBinPacking(PROFS).is_schedulable(rates):
+        eased = {m: r * 0.90 for m, r in rates.items()}
+        assert ElasticPartitioning(PROFS).is_schedulable(eased)
+
+
+def test_gpulet_beats_sbp_on_paper_scenarios():
+    for name, rates in REQUEST_SCENARIOS.items():
+        g = ElasticPartitioning(PROFS).max_scale(rates)
+        s = SquishyBinPacking(PROFS).max_scale(rates)
+        assert g >= s * 0.99, (name, g, s)
+
+
+def test_ideal_at_least_elastic():
+    rates = REQUEST_SCENARIOS["equal"]
+    lam_e = ElasticPartitioning(PROFS, intf_model=INTF).max_scale(rates)
+    lam_i = IdealScheduler(PROFS, intf_model=INTF).max_scale(rates)
+    assert lam_i >= lam_e * 0.99
+
+
+def test_application_streams():
+    game = APPLICATIONS["game"]
+    assert game.n_inferences == 7  # 6 LeNets + ResNet50 (Fig. 10)
+    profs = game.profiles(PROFS)
+    assert all(p.slo_ms == 95.0 for p in profs.values())
+    traffic = APPLICATIONS["traffic"]
+    assert traffic.n_inferences == 3

@@ -1,0 +1,66 @@
+"""Unit tests for the GSPMD sharding rules (no device mesh needed)."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch.sharding import param_spec_for
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+MESH = FakeMesh()
+CFG = get_config("yi-9b")
+
+
+def spec(names, shape, fsdp=False):
+    return tuple(param_spec_for(names, shape, MESH, CFG, fsdp))
+
+
+def test_attention_specs():
+    assert spec(["layers", "attn", "wq"], (48, 4096, 32, 128)) == \
+        (None, None, "model", None)
+    # kv heads not divisible -> replicated (never head_dim-sharded)
+    assert spec(["layers", "attn", "wk"], (48, 4096, 4, 128)) == \
+        (None, None, None, None)
+    assert spec(["layers", "attn", "wo"], (48, 32, 128, 4096)) == \
+        (None, "model", None, None)
+
+
+def test_fsdp_adds_data_axis():
+    assert spec(["layers", "attn", "wq"], (48, 4096, 32, 128), fsdp=True) == \
+        (None, "data", "model", None)
+    assert spec(["layers", "mlp", "w_down"], (48, 11008, 4096), fsdp=True) == \
+        (None, "model", "data")
+
+
+def test_moe_expert_parallel():
+    assert spec(["layers", "moe", "w_gate"], (28, 64, 2048, 1408)) == \
+        (None, "model", None, None)
+    assert spec(["layers", "moe", "w_down"], (28, 64, 1408, 2048),
+                fsdp=True) == (None, "model", None, "data")
+    # shared-expert mlp inside moe keeps the plain mlp rule
+    assert spec(["layers", "moe", "shared", "w_up"], (28, 2048, 2816)) == \
+        (None, None, "model")
+
+
+def test_vocab_and_norms():
+    assert spec(["embed", "tok"], (64000, 4096)) == ("model", None)
+    assert spec(["embed", "head"], (4096, 64000), fsdp=True) == \
+        ("data", "model")
+    assert spec(["layers", "ln1", "scale"], (48, 4096)) == (None, None)
+
+
+def test_non_divisible_degrades_to_replication():
+    # 10 heads on a 16-way axis: replicate rather than fail
+    assert spec(["layers", "attn", "wq"], (26, 2560, 10, 256)) == \
+        (None, None, None, None)
+
+
+def test_ssm_head_sharding():
+    assert spec(["layers", "ssm", "w_x"], (48, 1536, 3072)) == \
+        (None, None, "model")
+    assert spec(["layers", "ssm", "a_log"], (48, 48)) == (None, "model")
+    assert spec(["layers", "ssm", "w_bc"], (48, 1536, 256)) == \
+        (None, None, None)

@@ -1,0 +1,65 @@
+"""Discrete-event simulator invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ElasticPartitioning, calibrate_profiles, fit_default_model
+from repro.simulator import PoissonArrivals, SimConfig, simulate_schedule
+from repro.simulator.events import merge_sorted
+
+PROFS = calibrate_profiles()
+INTF, _ = fit_default_model(PROFS)
+
+
+def _simulate(rates, seed=0, horizon=8000.0, intf=True):
+    sched = ElasticPartitioning(PROFS, intf_model=INTF if intf else None)
+    res = sched.schedule(rates)
+    gen = PoissonArrivals(seed=seed)
+    reqs = merge_sorted([gen.constant(m, r, PROFS[m].slo_ms, horizon)
+                         for m, r in rates.items()])
+    met = simulate_schedule(res, PROFS, reqs, SimConfig(horizon_ms=horizon))
+    return res, reqs, met
+
+
+def test_conservation():
+    """Every request either completes or is dropped; counts add up."""
+    rates = {"goo": 200, "res": 100, "vgg": 80}
+    res, reqs, met = _simulate(rates)
+    assert met.total == len(reqs)
+    n_done = sum(1 for r in reqs if r.completion_ms is not None)
+    n_drop = sum(1 for r in reqs if r.dropped)
+    assert n_done + n_drop == len(reqs)
+    assert met.completed == n_done and met.dropped == n_drop
+
+
+def test_low_load_no_violations():
+    rates = {"goo": 50, "res": 30}
+    _, _, met = _simulate(rates)
+    assert met.violation_rate < 0.005
+    assert met.throughput_req_s > 0.9 * sum(rates.values())
+
+
+def test_latencies_positive_and_causal():
+    rates = {"res": 150, "ssd": 100}
+    _, reqs, _ = _simulate(rates, seed=3)
+    for r in reqs:
+        if r.completion_ms is not None:
+            assert r.completion_ms >= r.arrival_ms
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10, deadline=None)
+def test_admitted_load_keeps_slo_mostly(seed):
+    """At 80% of claimed capacity, violations stay well below 1%."""
+    sched = ElasticPartitioning(PROFS, intf_model=INTF)
+    rates = {"goo": 100, "res": 60, "vgg": 40}
+    lam = sched.max_scale(rates)
+    use = {m: r * lam * 0.8 for m, r in rates.items()}
+    _, _, met = _simulate(use, seed=seed)
+    assert met.violation_rate < 0.01
+
+
+def test_poisson_rate_matches():
+    gen = PoissonArrivals(seed=1)
+    reqs = gen.constant("m", 500.0, 10.0, 60_000.0)
+    rate = len(reqs) / 60.0
+    assert abs(rate - 500.0) / 500.0 < 0.05

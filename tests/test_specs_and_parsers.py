@@ -1,0 +1,91 @@
+"""launch/specs applicability + dryrun HLO parsers."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import (INPUT_SHAPES, applicable, batch_specs,
+                                decode_window, input_specs)
+
+
+def test_applicability_matrix():
+    """38 runnable combos + hubert's two decode skips (DESIGN.md)."""
+    runnable = skipped = 0
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES:
+            ok, why = applicable(cfg, s)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert a == "hubert-xlarge" and "encoder-only" in why
+    assert runnable == 38 and skipped == 2
+
+
+def test_decode_window_policy():
+    assert decode_window(get_config("yi-9b"), "long_500k") == 4096
+    assert decode_window(get_config("mamba2-780m"), "long_500k") is None
+    assert decode_window(get_config("recurrentgemma-2b"), "long_500k") is None
+    assert decode_window(get_config("yi-9b"), "decode_32k") is None
+
+
+def test_batch_specs_modalities():
+    vlm = batch_specs(get_config("internvl2-76b"), 32, 32768)
+    assert vlm["tokens"].shape[1] + vlm["patch_embeds"].shape[1] == 32768
+    audio = batch_specs(get_config("hubert-xlarge"), 8, 1024)
+    assert audio["frame_embeds"].shape == (8, 1024, 1280)
+    assert audio["labels"].dtype == jnp.int32
+
+
+def test_input_specs_kinds():
+    assert input_specs(get_config("yi-9b"), "train_4k")[0] == "train"
+    assert input_specs(get_config("yi-9b"), "prefill_32k")[0] == "prefill"
+    assert input_specs(get_config("yi-9b"), "decode_32k")[0] == "decode"
+    assert input_specs(get_config("hubert-xlarge"), "prefill_32k")[0] == \
+        "encode"
+
+
+def test_long500k_cache_is_windowed():
+    _, (cache, tokens) = input_specs(get_config("command-r-35b"), "long_500k")
+    import jax
+    sizes = [l.shape for l in jax.tree.leaves(cache["layers"])]
+    assert all(s[2] == 4096 for s in sizes if len(s) == 5)  # ring buffer
+    assert tokens.shape == (1, 1)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_stats
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(f32[2,128]{1,0} %p), dimensions={0}
+  %ar = bf16[4,8]{1,0} all-reduce(bf16[4,8]{1,0} %q), to_apply=%sum
+  %a2a = f32[8,8]{1,0} all-to-all(f32[8,8]{1,0} %r), dimensions={0}
+"""
+    st = collective_stats(hlo)
+    assert st["counts"] == {"all-gather": 1, "all-reduce": 1, "all-to-all": 1}
+    assert st["bytes_by_kind"]["all-gather"] == 16 * 128 * 4
+    assert st["bytes_by_kind"]["all-reduce"] == 4 * 8 * 2
+
+
+def test_convert_parser_skips_fusions():
+    from repro.launch.dryrun import bf16_convert_bytes
+    hlo = """
+ENTRY %main (p: bf16[8,8]) -> f32[8,8] {
+  %c = f32[8,8]{1,0} convert(bf16[8,8]{1,0} %p)
+}
+%fused_computation (q: bf16[4,4]) -> f32[4,4] {
+  %c2 = f32[4,4]{1,0} convert(bf16[4,4]{1,0} %q)
+}
+"""
+    assert bf16_convert_bytes(hlo) == 8 * 8 * 4  # fused convert not counted
+
+
+def test_optimal_model_axis():
+    from repro.launch.dryrun import optimal_model_axis
+    assert optimal_model_axis(get_config("arctic-480b"), "prefill_32k") == 8
+    assert optimal_model_axis(get_config("command-r-35b"), "decode_32k") == 8
+    assert optimal_model_axis(get_config("yi-9b"), "decode_32k") == 4
+    assert optimal_model_axis(get_config("yi-9b"), "train_4k") == 16
+    assert optimal_model_axis(get_config("mamba2-780m"), "decode_32k") == 16
+    assert optimal_model_axis(get_config("deepseek-moe-16b"),
+                              "decode_32k") == 16  # MoE decode stays wide
+    assert optimal_model_axis(get_config("yi-9b"), "long_500k") == 16

@@ -1,0 +1,85 @@
+"""Training substrate: optimizer math, learning, checkpoint roundtrip."""
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLM, token_batches
+from repro.models import Model
+from repro.training import OptimConfig, adamw_init, adamw_update, train_loop
+from repro.training.optim import global_norm, schedule
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = adamw_init(params)
+    cfg = OptimConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=1000)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    cfg = OptimConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    grads = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw_update(params, grads, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule(cfg, jnp.array(s))) for s in (1, 10, 50, 100)]
+    assert lrs[0] < lrs[1]
+    assert lrs[1] >= lrs[2] >= lrs[3]
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == 5.0
+
+
+def test_training_learns_synthetic_lm():
+    cfg = get_smoke_config("chatglm3-6b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batches = token_batches(cfg.vocab_size, batch=8, seq=64, n_steps=40,
+                            seed=5)
+    _, _, hist = train_loop(model, params, batches,
+                            OptimConfig(lr=1e-3, warmup_steps=10,
+                                        total_steps=40), log_every=20,
+                            log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < math.log(cfg.vocab_size) - 0.3
+
+
+def test_synthetic_lm_is_learnable_structure():
+    gen = SyntheticLM(1000, seed=0)
+    rng = np.random.default_rng(0)
+    toks = gen.sample(rng, 4, 256)
+    assert toks.shape == (4, 256)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # structured: successor entropy far below uniform
+    assert len(np.unique(toks)) < 400
+
+
+def test_checkpoint_roundtrip_mixed_dtypes():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                   "c": jnp.array(7, jnp.int32)},
+        "lst": [jnp.zeros((2,), jnp.float32), jnp.ones((3,), jnp.bfloat16)],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=3)
+        back = load_checkpoint(d, jax.eval_shape(lambda: tree), step=3)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
