@@ -8,7 +8,7 @@ from __future__ import annotations
 from benchmarks.common import Row, setup, timed
 from repro.core import ElasticPartitioning
 from repro.core.scenarios import REQUEST_SCENARIOS
-from repro.simulator import PoissonArrivals, SimConfig, simulate_schedule
+from repro.simulator import EngineConfig, EventHeapEngine, PoissonArrivals
 from repro.simulator.events import merge_sorted
 
 
@@ -19,7 +19,11 @@ def violation_at_max(sched, profs, rates, horizon_ms=20_000.0, seed=42):
     gen = PoissonArrivals(seed=seed)
     reqs = merge_sorted([gen.constant(m, r, profs[m].slo_ms, horizon_ms)
                          for m, r in use.items()])
-    met = simulate_schedule(res, profs, reqs, SimConfig(horizon_ms=horizon_ms))
+    eng = EventHeapEngine(
+        profs, EngineConfig(horizon_ms=horizon_ms, acc=sched.acc),
+        schedule=res)
+    eng.submit(reqs)
+    met = eng.run()
     return sum(use.values()), met.violation_rate
 
 

@@ -35,4 +35,5 @@ def run(fast: bool = False) -> list[Row]:
                 f"periods={len(recs)} requests={tot} "
                 f"violations={100*viol/max(tot,1):.3f}% (paper 0.14%) "
                 f"rescheds={sum(r.rescheduled for r in recs)} "
+                f"midflight_reorgs={ctrl.engine.epoch - 1} "
                 f"partition_range={trough}%..{peak}% (adapts)")]

@@ -1,5 +1,10 @@
 """Fig. 14 demo: the controller adapting gpu-let partitions to load waves.
 
+One event-heap engine serves the whole horizon; the controller answers its
+reschedule ticks and the engine applies new partitionings mid-flight (after
+the configured reorganization delay), so requests straddling a period
+boundary are carried over instead of vanishing.
+
 Prints an ASCII strip chart of load vs. allocated partition (%) per period.
 
 Run:  PYTHONPATH=src python examples/fluctuating_rates.py

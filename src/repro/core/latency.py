@@ -166,6 +166,44 @@ def min_required_partition(prof: ModelProfile, rate: float,
     return None
 
 
+class LatencyMemo:
+    """Memoized L(b, p) and SLO-batch-cap lookups for simulator hot paths.
+
+    The discrete-event engine evaluates L(b, p) once per batch launch; the
+    analytic model is cheap but not free, and the lookups repeat heavily
+    (few distinct (model, batch, partition) triples per run).  Entries are
+    keyed by profile *name*, so one memo instance must only ever see one
+    profile set — the engine creates its own per run.
+    """
+
+    def __init__(self, acc: AcceleratorSpec = RTX_2080TI):
+        self.acc = acc
+        self._lat: dict[tuple, float] = {}
+        self._cap: dict[tuple, int] = {}
+
+    def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
+        key = (prof.name, batch, p)
+        v = self._lat.get(key)
+        if v is None:
+            v = latency_ms(prof, batch, p, self.acc)
+            self._lat[key] = v
+        return v
+
+    def max_batch_under_slo(self, prof: ModelProfile, p: float,
+                            slo_ms: float, intf_factor: float = 1.0,
+                            headroom: float = 0.5) -> int:
+        key = (prof.name, p, slo_ms, intf_factor, headroom)
+        v = self._cap.get(key)
+        if v is None:
+            best = 0
+            for b in BATCH_SIZES:
+                if intf_factor * self.latency_ms(prof, b, p) \
+                        <= headroom * slo_ms:
+                    best = b
+            v = self._cap[key] = best
+        return v
+
+
 class LatencyProvider:
     """Pluggable L(b, p) source for the schedulers.
 

@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API surface we use.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+kept the same kwargs, notably ``dimension_semantics``).  The kernels accept
+either so they run on both old and new jax releases.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

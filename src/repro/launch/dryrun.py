@@ -182,7 +182,11 @@ def _build_step(cfg, shape_name: str, mesh, *, fsdp_override=None):
 
 
 def _cost_record(compiled) -> dict:
+    # jax's Compiled.cost_analysis() returned a one-element list of dicts
+    # through 0.4.x and a plain dict from 0.5; accept both.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     coll = collective_stats(txt)
     raw_bytes = float(cost.get("bytes accessed", 0.0))

@@ -5,6 +5,21 @@ moving average, and every 20 s (chosen so the 10-15 s partition-reorganization
 cost hides inside the window) re-runs elastic partitioning if the rates
 changed enough to either violate SLOs (rate increase) or leave gpu-lets
 underutilized (rate decrease).
+
+The controller is a *subscriber* of the event-heap engine
+(``simulator/engine.py``): one engine owns queues and gpu-let state across
+the whole horizon, fires a reschedule tick every period, and the controller
+answers each tick with either ``None`` (keep the current partitioning) or a
+new ``ScheduleResult`` that the engine applies mid-flight after the
+configured reorganization delay.  There is no per-period simulator restart:
+requests in flight or queued at a period boundary carry over, and requests
+arriving during a reorganization queue up instead of vanishing.
+
+Because the controller now only sees rates it has *observed* (the old loop
+scheduled each window against that same window's arrivals, which was
+acausal), the scheduling target adds a one-period linear trend extrapolation
+on top of the EWMA — without it a rising load wave outruns the EWMA lag and
+the paper's low violation rates are unreachable.
 """
 from __future__ import annotations
 
@@ -13,9 +28,9 @@ from collections.abc import Callable, Mapping
 
 from repro.core.profiles import ModelProfile
 from repro.core.scheduler_base import SchedulerBase, ScheduleResult
-from repro.simulator.cluster import SimConfig, simulate_schedule
+from repro.simulator.engine import EngineConfig, EventHeapEngine
 from repro.simulator.events import PoissonArrivals, merge_sorted
-from repro.simulator.metrics import SimMetrics
+from repro.simulator.metrics import SimMetrics, window_metrics
 
 
 class EWMARateTracker:
@@ -37,29 +52,37 @@ class EWMARateTracker:
 @dataclasses.dataclass
 class PeriodRecord:
     t_start_s: float
-    ewma_rates: dict[str, float]
-    observed_rates: dict[str, float]
+    ewma_rates: dict[str, float]      # EWMA in force at the window start
+    observed_rates: dict[str, float]  # rates actually seen in the window
     rescheduled: bool
     used_partition_total: int     # sum of occupied gpu-let sizes (%)
     metrics: SimMetrics
 
 
 class ServingController:
-    """Drives scheduler + simulator period by period (Fig. 14 experiment)."""
+    """Reschedule-tick subscriber driving one event engine (Fig. 14)."""
 
     def __init__(self, scheduler: SchedulerBase,
                  profiles: Mapping[str, ModelProfile],
                  period_s: float = 20.0,
                  resched_threshold: float = 0.10,
-                 seed: int = 0):
+                 seed: int = 0,
+                 reorg_s: float = 2.0,
+                 reorg_policy: str = "serve-old"):
         self.scheduler = scheduler
         self.profiles = dict(profiles)
         self.period_s = period_s
         self.resched_threshold = resched_threshold
+        self.reorg_s = reorg_s
+        self.reorg_policy = reorg_policy
         self.tracker = EWMARateTracker()
         self.schedule: ScheduleResult | None = None
         self.scheduled_rates: dict[str, float] = {}
         self.gen = PoissonArrivals(seed=seed)
+        self._prev_obs: dict[str, float] = {}
+        self._margin = 1.05
+        # per-window decision trace, assembled into PeriodRecords after run()
+        self._decisions: list[tuple[dict[str, float], bool, int]] = []
 
     def _needs_reschedule(self, rates: Mapping[str, float]) -> bool:
         if self.schedule is None:
@@ -71,48 +94,96 @@ class ServingController:
                 return True
         return False
 
+    def _target(self, ewma: Mapping[str, float],
+                observed: Mapping[str, float]) -> dict[str, float]:
+        """Predicted next-window peak rates, with safety margin.
+
+        Rising load: extrapolate the last observation by 1.5 windows of its
+        trend (the observation is the *average* over a window; the schedule
+        must cover the *end* of the next one).  Falling/steady load: the
+        EWMA floor prevents thrash on window noise.
+        """
+        out = {}
+        for m, r in ewma.items():
+            obs = observed.get(m, r)
+            trend = max(0.0, obs - self._prev_obs.get(m, obs))
+            out[m] = max(r, obs + 1.5 * trend) * self._margin
+        return {m: r for m, r in out.items() if r > 0}
+
+    def _reschedule(self, ewma: Mapping[str, float],
+                    observed: Mapping[str, float]) -> ScheduleResult | None:
+        """Shared decision logic for the initial schedule and each tick."""
+        result = self.scheduler.schedule(self._target(ewma, observed))
+        if result.schedulable or self.schedule is None:
+            self.schedule = result
+            self.scheduled_rates = dict(ewma)
+            return result
+        return None  # keep the old schedule if the new rates don't fit
+
+    def _on_tick(self, t_ms: float, observed: dict[str, float],
+                 engine: EventHeapEngine) -> ScheduleResult | None:
+        ewma = self.tracker.update(observed)
+        applied = None
+        check = {m: max(r, observed.get(m, 0.0)) for m, r in ewma.items()}
+        if self._needs_reschedule(check):
+            applied = self._reschedule(ewma, observed)
+        self._prev_obs = dict(observed)
+        self._decisions.append(
+            (dict(ewma), applied is not None,
+             self.schedule.used_partition_total()))
+        return applied
+
     def run(self, rate_fns: Mapping[str, Callable[[float], float]],
             horizon_s: float, margin: float = 1.05) -> list[PeriodRecord]:
         """Simulate ``horizon_s`` seconds of serving with fluctuating rates.
 
-        ``rate_fns[model](t_s)`` gives the instantaneous request rate.  Each
-        period the controller observes arrivals, updates the EWMA, and
-        reschedules when rates moved beyond the threshold.  ``margin``
-        over-provisions the scheduled rate slightly to cover prediction error
-        (the paper notes occasional violations from rate mis-prediction).
+        ``rate_fns[model](t_s)`` gives the instantaneous request rate.  The
+        whole-horizon trace is generated up front (inhomogeneous Poisson via
+        thinning); the engine then drives one continuous simulation, calling
+        back into the controller at every reschedule tick.  ``margin``
+        over-provisions the scheduled rate slightly to cover prediction
+        error (the paper notes occasional violations from mis-prediction).
         """
+        self._margin = margin
+        horizon_ms = horizon_s * 1e3
+        n_windows = max(1, int(round(horizon_s / self.period_s)))
+        streams = []
+        for m, fn in rate_fns.items():
+            grid = [k * horizon_s / 256 for k in range(257)]
+            peak = max(fn(t) for t in grid) + 1e-9
+            streams.append(self.gen.time_varying(
+                m, lambda t, fn=fn: fn(t / 1e3), peak,
+                self.profiles[m].slo_ms, horizon_ms))
+        reqs = merge_sorted(streams)
+
+        # deployment-time estimate: schedule the t=0 instantaneous rates.
+        init = {m: fn(0.0) for m, fn in rate_fns.items()}
+        ewma0 = self.tracker.update(init)
+        self._prev_obs = dict(init)
+        self._reschedule(ewma0, init)
+        self._decisions = [(dict(ewma0), True,
+                            self.schedule.used_partition_total())]
+
+        engine = EventHeapEngine(
+            self.profiles,
+            EngineConfig(horizon_ms=horizon_ms, acc=self.scheduler.acc,
+                         period_ms=self.period_s * 1e3,
+                         reorg_ms=self.reorg_s * 1e3,
+                         reorg_policy=self.reorg_policy),
+            schedule=self.schedule, on_tick=self._on_tick)
+        engine.submit(reqs)
+        engine.run()
+        self.engine = engine
+
+        per_window = window_metrics(reqs, self.period_s * 1e3, n_windows,
+                                    horizon_ms=horizon_ms)
         records: list[PeriodRecord] = []
-        n_periods = int(horizon_s / self.period_s)
-        period_ms = self.period_s * 1e3
-        for k in range(n_periods):
-            t0 = k * self.period_s
-            # generate this period's arrivals from the true (fluctuating) rate
-            streams = []
-            observed: dict[str, float] = {}
-            for m, fn in rate_fns.items():
-                peak = max(fn(t0 + dt) for dt in
-                           [x * self.period_s / 8 for x in range(9)]) + 1e-9
-                reqs = self.gen.time_varying(
-                    m, lambda t, fn=fn, t0=t0: fn(t0 + t / 1e3), peak,
-                    self.profiles[m].slo_ms, period_ms)
-                observed[m] = len(reqs) / self.period_s
-                streams.append(reqs)
-            ewma = self.tracker.update(observed)
-            resched = self._needs_reschedule(ewma)
-            if resched:
-                target = {m: r * margin for m, r in ewma.items() if r > 0}
-                result = self.scheduler.schedule(target)
-                # keep the old schedule if the new rates are unschedulable
-                if result.schedulable or self.schedule is None:
-                    self.schedule = result
-                    self.scheduled_rates = dict(ewma)
-            reqs = merge_sorted(streams)
-            metrics = simulate_schedule(
-                self.schedule, self.profiles, reqs,
-                SimConfig(horizon_ms=period_ms, acc=self.scheduler.acc))
+        for k in range(n_windows):
+            ewma, resched, used = self._decisions[min(
+                k, len(self._decisions) - 1)]
+            obs = engine.window_obs[k] if k < len(engine.window_obs) else {}
             records.append(PeriodRecord(
-                t_start_s=t0, ewma_rates=dict(ewma), observed_rates=observed,
-                rescheduled=resched,
-                used_partition_total=self.schedule.used_partition_total(),
-                metrics=metrics))
+                t_start_s=k * self.period_s, ewma_rates=ewma,
+                observed_rates=obs, rescheduled=resched,
+                used_partition_total=used, metrics=per_window[k]))
         return records

@@ -1,7 +1,8 @@
 """Discrete-event simulator of the paper's multi-GPU inference testbed."""
-from repro.simulator.events import PoissonArrivals, Request
 from repro.simulator.cluster import SimConfig, simulate_schedule
-from repro.simulator.metrics import SimMetrics
+from repro.simulator.engine import EngineConfig, EventHeapEngine
+from repro.simulator.events import PoissonArrivals, Request
+from repro.simulator.metrics import SimMetrics, window_metrics
 
-__all__ = ["PoissonArrivals", "Request", "SimConfig", "SimMetrics",
-           "simulate_schedule"]
+__all__ = ["EngineConfig", "EventHeapEngine", "PoissonArrivals", "Request",
+           "SimConfig", "SimMetrics", "simulate_schedule", "window_metrics"]

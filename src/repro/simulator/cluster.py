@@ -1,14 +1,14 @@
-"""Event-driven execution of a schedule against a request trace.
+"""Compatibility shim: one-shot simulation of a static schedule.
 
-This is the stand-in for the paper's prototype server: each gpu-let runs a
-*duty-cycle* loop (Fig. 1) — once per duty cycle it walks its assigned models
-in order, launching one batch per model from whatever requests accumulated
-(up to the scheduled batch size).  Two gpu-lets of one GPU run concurrently
-and experience the *ground-truth* interference of interference.py (which the
-scheduler's linear model only approximates — that gap is what Fig. 13
-measures).
+The real simulator now lives in ``engine.py`` — an event-heap discrete-event
+engine that owns request queues and gpu-let state across the whole horizon
+and supports mid-flight rescheduling.  This module keeps the historical
+entry point ``simulate_schedule(result, profiles, requests, cfg)`` (used by
+the benchmarks, examples, and tests) as a thin wrapper: it builds an engine
+with a single static ``ScheduleResult`` and runs the trace to completion.
 
-Simplifications vs. real hardware, recorded for honesty:
+Simplifications vs. real hardware (inherited by the engine), recorded for
+honesty:
   * batch launches are paced by the duty cycle; an overrunning cycle pushes
     the next one (no preemption, kernel-granularity as on real GPUs);
   * the interference factor applies when the partner gpu-let has a batch in
@@ -19,16 +19,14 @@ Simplifications vs. real hardware, recorded for honesty:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from collections.abc import Mapping
 
-from repro.core import latency as latmod
 from repro.core.hardware import AcceleratorSpec, RTX_2080TI
-from repro.core.interference import true_interference_factors
 from repro.core.profiles import ModelProfile
 from repro.core.scheduler_base import ScheduleResult
+from repro.simulator.engine import EngineConfig, EventHeapEngine
 from repro.simulator.events import Request
-from repro.simulator.metrics import SimMetrics, collect
+from repro.simulator.metrics import SimMetrics
 
 
 @dataclasses.dataclass
@@ -37,131 +35,13 @@ class SimConfig:
     acc: AcceleratorSpec = RTX_2080TI
 
 
-def _route(result: ScheduleResult, requests: list[Request]
-           ) -> dict[int, dict[str, deque[Request]]]:
-    """Smooth-weighted-round-robin routing of requests to gpu-lets."""
-    lets = result.gpulets
-    targets: dict[str, list[list[float]]] = {}
-    for i, let in enumerate(lets):
-        for a in let.assignments:
-            targets.setdefault(a.model, []).append([i, a.rate, 0.0])
-    queues: dict[int, dict[str, deque[Request]]] = {
-        i: {a.model: deque() for a in let.assignments}
-        for i, let in enumerate(lets)}
-    for r in requests:
-        tgt = targets.get(r.model)
-        if not tgt:
-            r.dropped = True  # model not scheduled at all
-            continue
-        total = sum(w for _, w, _ in tgt)
-        best = None
-        for entry in tgt:
-            entry[2] += entry[1]
-            if best is None or entry[2] > best[2]:
-                best = entry
-        best[2] -= total
-        queues[int(best[0])][r.model].append(r)
-    return queues
-
-
-@dataclasses.dataclass
-class _LetState:
-    cycle_start: float = 0.0
-    t: float = 0.0                       # clock within current walk
-    slot: int = 0                        # next assignment index in the cycle
-    inflight: tuple[str, int, float, float] | None = None  # model,b,start,end
-    done: bool = False
-
-
 def simulate_schedule(result: ScheduleResult,
                       profiles: Mapping[str, ModelProfile],
                       requests: list[Request],
                       cfg: SimConfig | None = None) -> SimMetrics:
     cfg = cfg or SimConfig()
-    lets = result.gpulets
-    queues = _route(result, requests)
-    busy_ms = {i: 0.0 for i in range(len(lets))}
-    states = {i: _LetState() for i in range(len(lets))}
-
-    partner: dict[int, int | None] = {}
-    for i, li in enumerate(lets):
-        partner[i] = None
-        for j, lj in enumerate(lets):
-            if j != i and lj.gpu_id == li.gpu_id:
-                partner[i] = j
-
-    def next_arrival(i: int) -> float | None:
-        arr = None
-        for q in queues[i].values():
-            if q:
-                a = q[0].arrival_ms
-                arr = a if arr is None else min(arr, a)
-        return arr
-
-    pending = {i for i, let in enumerate(lets) if let.assignments}
-    max_clock = cfg.horizon_ms * 8
-    while pending:
-        i = min(pending, key=lambda k: states[k].t)
-        st = states[i]
-        let = lets[i]
-        duty = max((a.duty_ms for a in let.assignments), default=1.0)
-        if st.t > max_clock:
-            pending.discard(i)
-            continue
-        n = len(let.assignments)
-        if st.slot >= n:
-            # cycle finished.  Nexus dispatch rule (§5): launch "when the
-            # desired size of request batch is formed OR a duty-cycle is
-            # passed" — so if some model's batch is already full, start the
-            # next cycle immediately; otherwise pace by the duty cycle.
-            nxt = max(st.cycle_start + duty, st.t)
-            for a in let.assignments:
-                q = queues[i][a.model]
-                if len(q) >= a.batch and q[a.batch - 1].arrival_ms <= st.t:
-                    nxt = max(st.t, st.cycle_start + 1e-3)
-                    break
-            arr = next_arrival(i)
-            if arr is None:
-                st.inflight = None
-                pending.discard(i)
-                continue
-            st.cycle_start = max(nxt, min(arr, max_clock)) if arr > nxt else nxt
-            st.t = st.cycle_start
-            st.slot = 0
-            continue
-        a = let.assignments[st.slot]
-        st.slot += 1
-        q = queues[i][a.model]
-        prof = profiles[a.model]
-        # catch-up batching: absorb bursts beyond the scheduled batch size as
-        # long as the bigger batch still executes within the SLO budget
-        # (adaptive batching, as in Nexus/Clipper executors).
-        b_cap = max(a.batch, latmod.max_batch_under_slo(
-            prof, let.frac, prof.slo_ms, 1.0, cfg.acc))
-        batch: list[Request] = []
-        while q and q[0].arrival_ms <= st.t and len(batch) < b_cap:
-            r = q.popleft()
-            if st.t - r.arrival_ms > r.slo_ms:
-                r.dropped = True
-                continue
-            batch.append(r)
-        if not batch:
-            continue
-        b = len(batch)
-        f = 1.0
-        pi = partner[i]
-        if pi is not None and states[pi].inflight is not None:
-            pm, pb, ps, pe = states[pi].inflight
-            if pe > st.t:  # partner batch overlaps our launch
-                f, _ = true_interference_factors(
-                    prof, let.frac, b,
-                    profiles[pm], lets[pi].frac, pb, cfg.acc)
-        exec_ms = f * latmod.latency_ms(prof, b, let.frac, cfg.acc)
-        done = st.t + exec_ms
-        for r in batch:
-            r.completion_ms = done
-        st.inflight = (a.model, b, st.t, done)
-        busy_ms[i] += exec_ms
-        st.t = done
-
-    return collect(requests, cfg.horizon_ms, busy_ms)
+    engine = EventHeapEngine(
+        profiles, EngineConfig(horizon_ms=cfg.horizon_ms, acc=cfg.acc),
+        schedule=result)
+    engine.submit(requests)
+    return engine.run()

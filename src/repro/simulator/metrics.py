@@ -31,6 +31,32 @@ class SimMetrics:
         return self.completed / (self.horizon_ms / 1e3) if self.horizon_ms else 0.0
 
 
+def window_metrics(requests: list[Request], window_ms: float,
+                   n_windows: int,
+                   horizon_ms: float | None = None) -> list[SimMetrics]:
+    """Per-window SimMetrics sliced out of one continuous event stream.
+
+    Requests are bucketed by *arrival* window (a request arriving in window
+    k counts there even if it completes in k+1 — with the event engine there
+    is no per-window simulator restart, so windows share in-flight state).
+    Arrivals beyond the last window boundary fold into the final window;
+    pass ``horizon_ms`` so that window's rates are normalized by its true
+    span (``horizon_ms - (n_windows - 1) * window_ms``) instead of one
+    period.
+    """
+    buckets: list[list[Request]] = [[] for _ in range(n_windows)]
+    for r in requests:
+        k = int(r.arrival_ms // window_ms)
+        if 0 <= k < n_windows:
+            buckets[k].append(r)
+        elif k >= n_windows:
+            buckets[-1].append(r)
+    spans = [window_ms] * n_windows
+    if horizon_ms is not None:
+        spans[-1] = max(horizon_ms - (n_windows - 1) * window_ms, 1e-9)
+    return [collect(b, s) for b, s in zip(buckets, spans)]
+
+
 def collect(requests: list[Request], horizon_ms: float,
             busy_ms: dict | None = None) -> SimMetrics:
     m = SimMetrics(horizon_ms=horizon_ms)

@@ -1,0 +1,196 @@
+"""Minimal stand-in for `hypothesis` used when the real library is absent.
+
+The tier-1 suite property-tests the scheduler core with hypothesis.  Some
+environments (e.g. the hermetic CPU container this repo is grown in) cannot
+pip-install it; rather than skipping six test modules wholesale,
+``conftest.py`` installs this shim into ``sys.modules`` so the property
+tests still execute — as deterministic random sampling (seeded per test,
+capped example count) instead of hypothesis's guided search + shrinking.
+
+Only the API surface the suite actually uses is provided: ``given`` (kwargs
+form), ``settings``, ``assume``, ``HealthCheck``, and the strategies
+``sampled_from / integers / floats / booleans / just / one_of / lists /
+tuples / dictionaries``.  Install the real hypothesis (requirements-dev.txt)
+to get full coverage; CI does.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+__stub__ = True
+
+_MAX_EXAMPLES_CAP = 25  # keep the fallback suite fast
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rnd: random.Random):
+        return self._sample(rnd)
+
+    def map(self, fn):
+        return _Strategy(lambda rnd: fn(self._sample(rnd)))
+
+    def filter(self, pred):
+        def sample(rnd):
+            for _ in range(100):
+                v = self._sample(rnd)
+                if pred(v):
+                    return v
+            raise _Unsatisfied
+        return _Strategy(sample)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def integers(min_value: int = 0, max_value: int = 1_000_000) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rnd: value)
+
+
+def one_of(*strategies) -> _Strategy:
+    opts = list(strategies)
+    return _Strategy(lambda rnd: rnd.choice(opts)._sample(rnd))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int | None = None, unique: bool = False) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 5
+
+    def sample(rnd):
+        n = rnd.randint(min_size, hi)
+        if not unique:
+            return [elements._sample(rnd) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(50 * max(n, 1)):
+            if len(out) >= n:
+                break
+            v = elements._sample(rnd)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+    return _Strategy(sample)
+
+
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(s._sample(rnd) for s in strategies))
+
+
+def dictionaries(keys: _Strategy, values: _Strategy, min_size: int = 0,
+                 max_size: int = 5) -> _Strategy:
+    def sample(rnd):
+        n = rnd.randint(min_size, max_size)
+        out = {}
+        for _ in range(50 * max(n, 1)):
+            if len(out) >= n:
+                break
+            out[keys._sample(rnd)] = values._sample(rnd)
+        return out
+    return _Strategy(sample)
+
+
+class settings:
+    """Decorator/record mirroring hypothesis.settings' common kwargs."""
+
+    def __init__(self, max_examples: int = 20, deadline=None,
+                 suppress_health_check=(), **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*args, **kwargs):
+    if args:
+        raise TypeError(
+            "the hypothesis fallback shim supports @given(kwargs) only; "
+            "install the real hypothesis for positional strategies")
+    strategies = kwargs
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*wargs, **wkwargs):
+            cfg = (getattr(wrapper, "_stub_settings", None)
+                   or getattr(fn, "_stub_settings", None))
+            n = min(cfg.max_examples if cfg else 20, _MAX_EXAMPLES_CAP)
+            rnd = random.Random(fn.__qualname__)  # deterministic per test
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n:
+                attempts += 1
+                try:
+                    drawn = {k: s._sample(rnd)
+                             for k, s in strategies.items()}
+                    fn(*wargs, **{**wkwargs, **drawn})
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                # mirror hypothesis's "Unable to satisfy assumptions"
+                # error: a property that never executes must not pass.
+                raise RuntimeError(
+                    f"{fn.__qualname__}: no example satisfied the test's "
+                    f"assumptions in {attempts} attempts")
+        # hide the strategy kwargs from pytest's fixture resolution: the
+        # wrapper's visible signature keeps only non-strategy parameters.
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return deco
+
+
+# expose a module object for `from hypothesis import strategies as st` /
+# `import hypothesis.strategies`
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("sampled_from", "integers", "floats", "booleans", "just",
+              "one_of", "lists", "tuples", "dictionaries"):
+    setattr(strategies, _name, globals()[_name])

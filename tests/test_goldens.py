@@ -1,0 +1,66 @@
+"""Golden placement snapshots for ElasticPartitioning (paper Table 5).
+
+The scheduler is deterministic: on a fixed profile calibration the three
+Table-5 scenarios must produce byte-identical placements (model ->
+(gpu, partition size, routed rate, batch)).  The snapshot in
+``tests/goldens/table5_placements.json`` pins that behavior so scheduler
+refactors can't silently move models around.
+
+Regenerate intentionally with:
+    REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_goldens.py
+and review the diff like any other code change.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import ElasticPartitioning, calibrate_profiles, fit_default_model
+from repro.core.scenarios import REQUEST_SCENARIOS
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "table5_placements.json")
+
+PROFS = calibrate_profiles()
+INTF, _ = fit_default_model(PROFS)
+
+
+def _snapshot() -> dict:
+    out = {}
+    for variant, sched in (("gpulet", ElasticPartitioning(PROFS)),
+                           ("gpulet+int",
+                            ElasticPartitioning(PROFS, intf_model=INTF))):
+        vsnap = {}
+        for name, rates in REQUEST_SCENARIOS.items():
+            res = sched.schedule({m: r for m, r in rates.items() if r > 0})
+            placements = []
+            for let in res.gpulets:
+                for a in let.assignments:
+                    placements.append([a.model, let.gpu_id, let.size,
+                                       round(a.rate, 4), a.batch])
+            placements.sort()
+            vsnap[name] = {"schedulable": res.schedulable,
+                           "placements": placements}
+        out[variant] = vsnap
+    return out
+
+
+def test_table5_placements_match_golden():
+    snap = _snapshot()
+    if os.environ.get("REGEN_GOLDENS"):
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        pytest.skip("goldens regenerated; review and commit the diff")
+    assert os.path.exists(GOLDEN_PATH), \
+        "golden snapshot missing; run with REGEN_GOLDENS=1 to create it"
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for variant, vsnap in snap.items():
+        for scenario, got in vsnap.items():
+            want = golden[variant][scenario]
+            assert got == want, (
+                f"{variant}/{scenario} placement drifted.\n"
+                f"  expected: {want}\n  got:      {got}\n"
+                "If intentional, regenerate with REGEN_GOLDENS=1.")

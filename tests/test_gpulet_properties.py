@@ -1,0 +1,81 @@
+"""Property tests for the gpu-let split/merge state machine (paper §4).
+
+Invariants under any legal sequence of SPLIT / REVERTSPLIT operations:
+  * the gpu-let sizes of one physical GPU always sum to 100%;
+  * the partitioning is always one the hardware supports (valid pairs);
+  * REVERTSPLIT restores the pre-split free list exactly (one free 100%
+    gpu-let, same gpu_id, no stray assignments).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gpulet import (GpuLet, fresh_cluster, revert_split, split,
+                               valid_partitioning)
+from repro.core.latency import SPLIT_PAIRS
+
+# an op is either a requested left-split size (split when legal) or -1
+# (revert when legal); illegal ops in the stream are skipped, which makes
+# every generated stream a legal operation sequence.
+_OPS = st.lists(
+    st.sampled_from([-1, 10, 20, 25, 40, 50, 55, 60, 75, 80]),
+    min_size=1, max_size=30)
+
+
+def _free_snapshot(gpu):
+    return [(l.gpu_id, l.size, l.split_from, list(l.assignments))
+            for l in gpu.lets]
+
+
+@given(ops=_OPS, n_gpus=st.integers(min_value=1, max_value=8))
+@settings(max_examples=100, deadline=None)
+def test_split_revert_sizes_always_sum_to_100(ops, n_gpus):
+    gpus = fresh_cluster(n_gpus)
+    for k, op in enumerate(ops):
+        gpu = gpus[k % n_gpus]
+        if op == -1:
+            if len(gpu.lets) == 2 and all(l.is_free for l in gpu.lets):
+                revert_split(gpu)
+        else:
+            if len(gpu.lets) == 1 and gpu.lets[0].size == 100 \
+                    and gpu.lets[0].is_free:
+                split(gpu, op)
+        for g in gpus:
+            assert sum(l.size for l in g.lets) == 100
+            assert valid_partitioning(g)
+            assert all(l.gpu_id == g.gpu_id for l in g.lets)
+
+
+@given(left=st.sampled_from([10, 20, 25, 40, 50, 55, 60, 75, 80]))
+@settings(max_examples=50, deadline=None)
+def test_revert_restores_pre_split_free_list_exactly(left):
+    gpu = fresh_cluster(1)[0]
+    before = _free_snapshot(gpu)
+    a, b = split(gpu, left)
+    assert a.size + b.size == 100
+    assert a.split_from and b.split_from
+    assert tuple(sorted((a.size, b.size))) in \
+        {tuple(sorted(p)) for p in SPLIT_PAIRS}
+    revert_split(gpu)
+    assert _free_snapshot(gpu) == before
+    assert len(gpu.lets) == 1 and gpu.lets[0].is_free
+
+
+def test_split_requires_free_whole_gpu():
+    gpu = fresh_cluster(1)[0]
+    split(gpu, 40)
+    with pytest.raises(AssertionError):
+        split(gpu, 40)  # already split
+
+
+def test_split_size_above_largest_pair_is_rejected():
+    gpu = fresh_cluster(1)[0]
+    with pytest.raises(ValueError):
+        split(gpu, 90)  # no (90, 10) pair exists
+
+
+def test_revert_refuses_occupied_lets():
+    gpu = fresh_cluster(1)[0]
+    a, _b = split(gpu, 50)
+    a.assignments.append(object())
+    with pytest.raises(AssertionError):
+        revert_split(gpu)
