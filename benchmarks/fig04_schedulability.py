@@ -2,8 +2,39 @@
 from __future__ import annotations
 
 from benchmarks.common import Row, setup, timed
-from repro.core import SquishyBinPacking
+from repro.core import ElasticPartitioning, SquishyBinPacking
+from repro.core.hardware import ClusterSpec, RTX_2080TI
 from repro.core.scenarios import schedulability_population
+
+
+def run_tiny() -> list[Row]:
+    """CI smoke: 1-GPU, 2-model schedulability sweep (seconds, not minutes).
+
+    Exercises the full admission path (duty-cycle search, EDF offsets,
+    best-fit splitting) on a deliberately tiny configuration so admission
+    regressions surface in CI without the cost of the 1023-scenario sweep.
+    The invariant checked: partitioning never *loses* scenarios — elastic
+    must admit at least as many of the population as unpartitioned SBP.
+    """
+    profs, intf, _ = setup()
+    cluster = ClusterSpec(accelerator=RTX_2080TI, n_devices=1)
+    pop = schedulability_population(models=("goo", "res"))
+    rows = []
+    counts = {}
+    for name, sched in (
+        ("sbp_no_partition", SquishyBinPacking(profs, cluster=cluster)),
+        ("gpulet", ElasticPartitioning(profs, cluster=cluster)),
+        ("gpulet+int", ElasticPartitioning(profs, cluster=cluster,
+                                           intf_model=intf)),
+    ):
+        count, us = timed(
+            lambda s=sched: sum(1 for r in pop if s.is_schedulable(r)))
+        counts[name] = count
+        rows.append(Row(f"fig04tiny/{name}", us,
+                        f"schedulable={count}/{len(pop)}"))
+    assert 0 < counts["gpulet"] <= len(pop), counts
+    assert counts["gpulet"] >= counts["sbp_no_partition"], counts
+    return rows
 
 
 def run(fast: bool = False) -> list[Row]:
@@ -21,3 +52,12 @@ def run(fast: bool = False) -> list[Row]:
         rows.append(Row(f"fig04/{name}", us,
                         f"schedulable={count}/{len(pop)}"))
     return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    tiny = "--tiny" in sys.argv
+    print("name,us_per_call,derived")
+    for row in (run_tiny() if tiny else run(fast="--fast" in sys.argv)):
+        print(row.csv())

@@ -8,7 +8,6 @@ from __future__ import annotations
 import statistics
 
 from benchmarks.common import Row, make_schedulers, setup, timed
-from repro.core import ElasticPartitioning, GuidedSelfTuning, SquishyBinPacking
 from repro.core.scenarios import APPLICATIONS, REQUEST_SCENARIOS
 
 

@@ -31,7 +31,7 @@ def run(fast: bool = False) -> list[Row]:
     profs, intf, _ = setup()
     horizon = 8_000.0 if fast else 20_000.0
     rows = []
-    all_ok = True
+    viols: dict[str, list[float]] = {}
     for name, sched in (("gpulet", ElasticPartitioning(profs)),
                         ("gpulet+int",
                          ElasticPartitioning(profs, intf_model=intf))):
@@ -39,11 +39,18 @@ def run(fast: bool = False) -> list[Row]:
             (rate, viol), us = timed(violation_at_max, sched, profs, rates,
                                      horizon)
             flag = "VIOLATES>1%" if viol > 0.01 else "ok(<1%)"
-            if name == "gpulet+int" and viol > 0.01:
-                all_ok = False
+            viols.setdefault(name, []).append(viol)
             rows.append(Row(f"fig13/{name}/{sc}", us,
                             f"rate={rate:.0f}/s violation={100*viol:.2f}% "
                             f"{flag}"))
+    # The paper's Fig. 13 contrast: plain gpulet (interference-blind
+    # admission) exceeds 1% violations on some scenarios it declared
+    # schedulable; gpulet+int books predicted factors and filters those.
+    plain_exceeds = any(v > 0.01 for v in viols.get("gpulet", []))
+    int_all_ok = all(v <= 0.01 for v in viols.get("gpulet+int", [1.0]))
     rows.append(Row("fig13/summary", 0.0,
-                    f"gpulet+int_all_below_1pct={all_ok} (paper: yes)"))
+                    f"gpulet_exceeds_1pct_somewhere={plain_exceeds} "
+                    f"gpulet+int_all_below_1pct={int_all_ok} "
+                    f"contrast_restored={plain_exceeds and int_all_ok} "
+                    "(paper: both True)"))
     return rows

@@ -5,15 +5,17 @@ from repro.core.hardware import (AcceleratorSpec, ClusterSpec, PAPER_CLUSTER,
                                  RTX_2080TI, TPU_V5E)
 from repro.core.ideal import IdealScheduler
 from repro.core.interference import InterferenceModel, fit_default_model
+from repro.core.latency import Admission, LatencyProvider
 from repro.core.profiles import PAPER_MODELS, ModelProfile, calibrate_profiles
 from repro.core.sbp import SquishyBinPacking
 from repro.core.scheduler_base import ScheduleResult, SchedulerBase
 from repro.core.selftuning import GuidedSelfTuning
 
 __all__ = [
-    "AcceleratorSpec", "Assignment", "ClusterSpec", "ElasticPartitioning",
-    "GpuLet", "GpuState", "GuidedSelfTuning", "IdealScheduler",
-    "InterferenceModel", "ModelProfile", "PAPER_CLUSTER", "PAPER_MODELS",
-    "RTX_2080TI", "ScheduleResult", "SchedulerBase", "SquishyBinPacking",
-    "TPU_V5E", "calibrate_profiles", "fit_default_model", "fresh_cluster",
+    "AcceleratorSpec", "Admission", "Assignment", "ClusterSpec",
+    "ElasticPartitioning", "GpuLet", "GpuState", "GuidedSelfTuning",
+    "IdealScheduler", "InterferenceModel", "LatencyProvider", "ModelProfile",
+    "PAPER_CLUSTER", "PAPER_MODELS", "RTX_2080TI", "ScheduleResult",
+    "SchedulerBase", "SquishyBinPacking", "TPU_V5E", "calibrate_profiles",
+    "fit_default_model", "fresh_cluster",
 ]

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 from collections.abc import Mapping
 
-from repro.core import latency as latmod
 from repro.core.gpulet import GpuLet, GpuState, fresh_cluster, revert_split, split
 from repro.core.scheduler_base import ScheduleResult, SchedulerBase, sorted_by_rate
 
@@ -74,8 +73,7 @@ class ElasticPartitioning(SchedulerBase):
                 for let2 in g2.lets:
                     if let2.is_free or let2 is let:
                         continue
-                    ok, _, _ = self.feasible_with(let2, g2, [(model, take)])
-                    if ok:
+                    if self.feasible_with(let2, g2, [(model, take)]).ok:
                         if did_split:
                             revert_split(gpu)
                         return let2, g2, take
@@ -91,8 +89,7 @@ class ElasticPartitioning(SchedulerBase):
                 take = min(rate, cap)
                 if take <= 0:
                     continue
-                ok, _, _ = self.feasible_with(let2, g2, [(model, take)])
-                if ok:
+                if self.feasible_with(let2, g2, [(model, take)]).ok:
                     return let2, g2, take
         return None
 

@@ -8,10 +8,8 @@ assigned models, Fig. 1 + Alg. 1).
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from collections.abc import Iterable
 
-from repro.core.latency import SPLIT_PAIRS, PARTITION_SIZES
+from repro.core.latency import SPLIT_PAIRS
 
 
 @dataclasses.dataclass

@@ -11,8 +11,7 @@ from __future__ import annotations
 import itertools
 from collections.abc import Mapping
 
-from repro.core import latency as latmod
-from repro.core.gpulet import (GpuLet, GpuState, enumerate_gpu_partitionings)
+from repro.core.gpulet import GpuLet, GpuState, enumerate_gpu_partitionings
 from repro.core.scheduler_base import ScheduleResult, SchedulerBase, sorted_by_rate
 
 

@@ -11,6 +11,9 @@ schedulers need:
   * ``max_rate(prof, p)``                 — sustainable req/s of a gpu-let
   * ``min_required_partition(prof, rate)``— p_req  (Alg.1 l.10)
   * ``max_efficient_partition(prof)``     — p_eff, the knee (Alg.1 l.9, Fig.8)
+  * ``LatencyProvider.admit(entries, p)`` — the completion-time-aware
+    duty-cycle admission test (the only implementation; the module-level
+    ``duty_cycle_feasible`` and ``LatencyMemo`` delegate to it)
 
 Latency model::
 
@@ -24,7 +27,7 @@ latency barely moves with p.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 import math
 from collections.abc import Sequence
 
@@ -66,7 +69,7 @@ def memory_ms(prof: ModelProfile, batch: int, p: float,
     """
     bw_frac = 0.5 + 0.5 * min(1.0, 2.0 * p)  # 0.7 at p=0.2 .. 1.0 at p>=0.5
     mb = prof.weight_mb + prof.act_mb_per_req * batch
-    return mb / (acc.hbm_gbs * bw_frac) * 1e3 / 1e3  # MB/(GB/s) -> ms
+    return mb / (acc.hbm_gbs * bw_frac)  # MB/(GB/s) -> ms
 
 
 def latency_ms(prof: ModelProfile, batch: int, p: float,
@@ -82,18 +85,11 @@ def latency_ms(prof: ModelProfile, batch: int, p: float,
 def max_batch_under_slo(prof: ModelProfile, p: float, slo_ms: float,
                         intf_factor: float = 1.0,
                         acc: AcceleratorSpec = RTX_2080TI,
-                        headroom: float = 0.5) -> int:
-    """argmax_b  intf * L(b, p) <= headroom * slo  (0 if even b=1 misses).
-
-    ``headroom`` reserves budget for batch *building* time: with duty-cycled
-    execution a request waits up to one duty cycle before its batch runs
-    (Fig. 1), so admission uses L(b,p) <= SLO/2 as in Nexus.
-    """
-    best = 0
-    for b in BATCH_SIZES:
-        if intf_factor * latency_ms(prof, b, p, acc) <= headroom * slo_ms:
-            best = b
-    return best
+                        headroom: float = 0.5,
+                        offset_ms: float = 0.0) -> int:
+    """Delegates to the single cap-search on :class:`LatencyProvider`."""
+    return AnalyticGPULatency(acc).max_batch_under_slo(
+        prof, p, slo_ms, intf_factor, headroom, offset_ms)
 
 
 def max_rate(prof: ModelProfile, p: float, intf_factor: float = 1.0,
@@ -166,42 +162,27 @@ def min_required_partition(prof: ModelProfile, rate: float,
     return None
 
 
-class LatencyMemo:
-    """Memoized L(b, p) and SLO-batch-cap lookups for simulator hot paths.
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """Result of the completion-time-aware duty-cycle admission test.
 
-    The discrete-event engine evaluates L(b, p) once per batch launch; the
-    analytic model is cheap but not free, and the lookups repeat heavily
-    (few distinct (model, batch, partition) triples per run).  Entries are
-    keyed by profile *name*, so one memo instance must only ever see one
-    profile set — the engine creates its own per run.
+    All per-entry sequences are aligned with the *input* entry order (the
+    EDF launch reordering happens internally):
+
+      * ``batches``        — batch size b_i = ceil(rate_i * duty)
+      * ``offsets_ms``     — launch offset of model i within the cycle (the
+        serialization wait behind earlier, tighter-SLO batches)
+      * ``est_latency_ms`` — offset_i + intf_i * L(b_i, p): the in-cycle
+        *completion* time the scheduler promises.  A request therefore
+        finishes within duty + est_latency_ms of arriving, and admission
+        guarantees that bound <= SLO_i.
     """
 
-    def __init__(self, acc: AcceleratorSpec = RTX_2080TI):
-        self.acc = acc
-        self._lat: dict[tuple, float] = {}
-        self._cap: dict[tuple, int] = {}
-
-    def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
-        key = (prof.name, batch, p)
-        v = self._lat.get(key)
-        if v is None:
-            v = latency_ms(prof, batch, p, self.acc)
-            self._lat[key] = v
-        return v
-
-    def max_batch_under_slo(self, prof: ModelProfile, p: float,
-                            slo_ms: float, intf_factor: float = 1.0,
-                            headroom: float = 0.5) -> int:
-        key = (prof.name, p, slo_ms, intf_factor, headroom)
-        v = self._cap.get(key)
-        if v is None:
-            best = 0
-            for b in BATCH_SIZES:
-                if intf_factor * self.latency_ms(prof, b, p) \
-                        <= headroom * slo_ms:
-                    best = b
-            v = self._cap[key] = best
-        return v
+    ok: bool
+    duty_ms: float
+    batches: tuple[int, ...]
+    offsets_ms: tuple[float, ...]
+    est_latency_ms: tuple[float, ...]
 
 
 class LatencyProvider:
@@ -227,10 +208,21 @@ class LatencyProvider:
     # ---- generic derived quantities (paper Alg. 1 inputs) -----------------
 
     def max_batch_under_slo(self, prof, p, slo_ms, intf_factor=1.0,
-                            headroom=0.5) -> int:
+                            headroom=0.5, offset_ms=0.0) -> int:
+        """argmax_b  offset + intf * L(b, p) <= headroom * slo  (0 if none).
+
+        ``headroom`` reserves budget for batch *building* time: with
+        duty-cycled execution a request waits up to one duty cycle before
+        its batch runs (Fig. 1), so admission uses L(b,p) <= SLO/2 as in
+        Nexus.  ``offset_ms`` is the model's launch offset within the cycle
+        (models later in the EDF walk wait behind earlier batches); the
+        engine passes it when deriving catch-up batch caps so a catch-up
+        batch cannot blow the SLO of a model that launches late.
+        """
         best = 0
+        budget = headroom * slo_ms - offset_ms
         for b in self.batch_sizes:
-            if intf_factor * self.latency_ms(prof, b, p) <= headroom * slo_ms:
+            if intf_factor * self.latency_ms(prof, b, p) <= budget:
                 best = b
         return best
 
@@ -274,28 +266,71 @@ class LatencyProvider:
                 return s
         return None
 
-    def duty_cycle_feasible(self, entries, p, intf_factor=1.0):
-        if not entries:
-            return True, 0.0, []
-        slo_min = min(prof.slo_ms for prof, _ in entries)
-        n_grid = 24
-        for k in range(n_grid, 0, -1):
-            duty = slo_min * k / n_grid
-            batches, exec_sum, ok = [], 0.0, True
-            for prof, rate in entries:
+    #: duty-cycle search grid resolution (candidate cycles per tightest SLO)
+    duty_grid: int = 24
+
+    def admit(self, entries, p, intf_factor=1.0) -> Admission:
+        """Completion-time-aware duty-cycle admission (the single core).
+
+        ``entries`` is [(profile, rate_req_s), ...]; ``intf_factor`` is
+        either one factor applied to every model or a per-entry sequence
+        aligned with ``entries``.  Searches duty cycles D over a grid up to
+        the tightest SLO; for each candidate the models are walked in EDF
+        order (tightest SLO first — exactly the engine's in-cycle launch
+        order) accumulating real launch offsets, and admission requires,
+        with completion_i = offset_i + intf_i * L(b_i, p):
+
+          (a) b_i = ceil(rate_i * D) <= max_batch;
+          (b) D + completion_i <= SLO_i for every model — batch build plus
+              the *serialized* in-cycle execution fits the SLO (this is
+              where the old test was serialization-blind: it assumed every
+              batch launched at the cycle start); and
+          (c) completion_last <= D — the execution pipeline keeps up.
+
+        Offsets count predecessors' interference-inflated latencies: a
+        batch behind a slowed-down batch really does launch later, so the
+        pipeline check (c) inherits the inflation too (a deliberate
+        departure from Alg. 1's "interference enters the SLO check only",
+        which under-books shared cycles).
+        """
+        n = len(entries)
+        if n == 0:
+            return Admission(True, 0.0, (), (), ())
+        if isinstance(intf_factor, (int, float)):
+            factors = [float(intf_factor)] * n
+        else:
+            factors = [float(f) for f in intf_factor]
+            if len(factors) != n:
+                raise ValueError("one interference factor per entry required")
+        order = sorted(range(n), key=lambda i: entries[i][0].slo_ms)
+        slo_min = entries[order[0]][0].slo_ms
+        for k in range(self.duty_grid, 0, -1):
+            duty = slo_min * k / self.duty_grid
+            batches = [0] * n
+            offsets = [0.0] * n
+            ests = [0.0] * n
+            t, ok = 0.0, True
+            for i in order:
+                prof, rate = entries[i]
                 b = max(1, math.ceil(rate * duty / 1e3))
                 if b > self.max_batch:
                     ok = False
                     break
-                lat = self.latency_ms(prof, b, p)
-                if duty + intf_factor * lat > prof.slo_ms:
+                done = t + factors[i] * self.latency_ms(prof, b, p)
+                if duty + done > prof.slo_ms:
                     ok = False
                     break
-                batches.append(b)
-                exec_sum += lat
-            if ok and exec_sum <= duty:
-                return True, duty, batches
-        return False, 0.0, []
+                batches[i], offsets[i], ests[i] = b, t, done
+                t = done
+            if ok and t <= duty:
+                return Admission(True, duty, tuple(batches),
+                                 tuple(offsets), tuple(ests))
+        return Admission(False, 0.0, (), (), ())
+
+    def duty_cycle_feasible(self, entries, p, intf_factor=1.0):
+        """(feasible, duty_ms, batches) view of :meth:`admit`."""
+        adm = self.admit(entries, p, intf_factor)
+        return adm.ok, adm.duty_ms, list(adm.batches)
 
 
 class AnalyticGPULatency(LatencyProvider):
@@ -308,38 +343,58 @@ class AnalyticGPULatency(LatencyProvider):
         return latency_ms(prof, batch, p, self.acc)
 
 
+class LatencyMemo(LatencyProvider):
+    """Memoizing :class:`LatencyProvider` for simulator hot paths.
+
+    The discrete-event engine evaluates L(b, p) once per batch launch; the
+    analytic model is cheap but not free, and the lookups repeat heavily
+    (few distinct (model, batch, partition) triples per run).  Entries are
+    keyed by profile *name*, so one memo instance must only ever see one
+    profile set — the engine creates its own per run.  All derived
+    quantities (batch caps, ``admit``) come from the shared
+    ``LatencyProvider`` implementations on top of the memoized L(b, p);
+    only the cap search carries its own result cache.
+    """
+
+    def __init__(self, acc: AcceleratorSpec = RTX_2080TI,
+                 inner: LatencyProvider | None = None):
+        self.acc = acc
+        self.inner = inner or AnalyticGPULatency(acc)
+        self.partition_sizes = self.inner.partition_sizes
+        self.split_pairs = self.inner.split_pairs
+        self.batch_sizes = self.inner.batch_sizes
+        self.max_batch = self.inner.max_batch
+        self._lat: dict[tuple, float] = {}
+        self._cap: dict[tuple, int] = {}
+
+    def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
+        key = (prof.name, batch, p)
+        v = self._lat.get(key)
+        if v is None:
+            v = self._lat[key] = self.inner.latency_ms(prof, batch, p)
+        return v
+
+    def max_batch_under_slo(self, prof: ModelProfile, p: float,
+                            slo_ms: float, intf_factor: float = 1.0,
+                            headroom: float = 0.5,
+                            offset_ms: float = 0.0) -> int:
+        key = (prof.name, p, slo_ms, intf_factor, headroom, offset_ms)
+        v = self._cap.get(key)
+        if v is None:
+            v = self._cap[key] = super().max_batch_under_slo(
+                prof, p, slo_ms, intf_factor, headroom, offset_ms)
+        return v
+
+
 def duty_cycle_feasible(entries: Sequence[tuple[ModelProfile, float]],
                         p: float, intf_factor: float = 1.0,
                         acc: AcceleratorSpec = RTX_2080TI,
                         ) -> tuple[bool, float, list[int]]:
-    """Feasibility of temporally sharing one gpu-let among several models.
+    """Module-level view of :meth:`LatencyProvider.admit` (see there).
 
-    ``entries`` is [(profile, rate_req_s), ...].  Searches duty cycles D:
-    batches b_i = ceil(rate_i * D) must satisfy (a) sum_i L(b_i, p) <= D
-    (execution pipeline keeps up) and (b) D + intf*L(b_i, p) <= SLO_i for all
-    i (batch build + execution within SLO, Fig. 1; interference enters the
-    SLO check only, per Alg. 1 line 28).  Returns (feasible, duty_ms,
-    batches).
+    Kept for callers that only need (feasible, duty_ms, batches) of the
+    analytic GPU model; the completion-time-aware admission core itself
+    lives in exactly one place, ``LatencyProvider.admit``.
     """
-    if not entries:
-        return True, 0.0, []
-    slo_min = min(prof.slo_ms for prof, _ in entries)
-    # candidate duty cycles: scan a grid up to the tightest SLO
-    n_grid = 24
-    for k in range(n_grid, 0, -1):
-        duty = slo_min * k / n_grid
-        batches, exec_sum, ok = [], 0.0, True
-        for prof, rate in entries:
-            b = max(1, math.ceil(rate * duty / 1e3))
-            if b > MAX_BATCH:
-                ok = False
-                break
-            lat = latency_ms(prof, b, p, acc)
-            if duty + intf_factor * lat > prof.slo_ms:
-                ok = False
-                break
-            batches.append(b)
-            exec_sum += lat
-        if ok and exec_sum <= duty:
-            return True, duty, batches
-    return False, 0.0, []
+    return AnalyticGPULatency(acc).duty_cycle_feasible(entries, p,
+                                                       intf_factor)

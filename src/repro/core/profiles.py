@@ -15,7 +15,6 @@ partition — the "flat region"; batch-32 curves keep improving with resource).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core.hardware import AcceleratorSpec, RTX_2080TI
 

@@ -14,10 +14,8 @@ independently).  The algorithm follows Nexus:
 """
 from __future__ import annotations
 
-import math
 from collections.abc import Mapping
 
-from repro.core import latency as latmod
 from repro.core.gpulet import GpuLet, GpuState
 from repro.core.scheduler_base import ScheduleResult, SchedulerBase, sorted_by_rate
 

@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
-from repro.core.profiles import ModelProfile, PAPER_MODELS
+from repro.core.profiles import ModelProfile
 
 # Table 5 -------------------------------------------------------------------
 REQUEST_SCENARIOS: dict[str, dict[str, float]] = {

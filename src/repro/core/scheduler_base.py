@@ -8,13 +8,11 @@ interference model.
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections.abc import Mapping, Sequence
 
-from repro.core import latency as latmod
-from repro.core.latency import AnalyticGPULatency, LatencyProvider
-from repro.core.gpulet import Assignment, GpuLet, GpuState, fresh_cluster
-from repro.core.hardware import AcceleratorSpec, ClusterSpec, PAPER_CLUSTER, RTX_2080TI
+from repro.core.latency import Admission, AnalyticGPULatency, LatencyProvider
+from repro.core.gpulet import Assignment, GpuLet, GpuState
+from repro.core.hardware import AcceleratorSpec, ClusterSpec, PAPER_CLUSTER
 from repro.core.interference import InterferenceModel
 from repro.core.profiles import ModelProfile
 
@@ -115,20 +113,32 @@ class SchedulerBase:
         return self.capacity(model, let.frac, f)
 
     def feasible_with(self, let: GpuLet, gpu: GpuState,
-                      extra: Sequence[tuple[str, float]] = ()) -> tuple[bool, float, list[int]]:
-        """Duty-cycle feasibility of let's current models plus ``extra``.
+                      extra: Sequence[tuple[str, float]] = ()) -> Admission:
+        """Completion-time admission of let's current models plus ``extra``.
 
         Rates are inflated by 1/headroom so the chosen batch sizes can absorb
-        Poisson bursts within one duty cycle.
+        Poisson bursts within one duty cycle.  Each model carries its *own*
+        predicted interference factor (the old single worst-case factor
+        smeared one model's bad co-location across every co-resident model).
         """
-        entries = [(self.profiles[a.model], a.rate / self.headroom)
-                   for a in let.assignments]
-        entries += [(self.profiles[m], r / self.headroom) for m, r in extra]
-        # worst interference over all models involved
-        f = 1.0
-        for m, _ in [(a.model, 0) for a in let.assignments] + list(extra):
-            f = max(f, self.intf_factor(m, let, gpu))
-        return self.lat.duty_cycle_feasible(entries, let.frac, f)
+        pairs = [(a.model, a.rate) for a in let.assignments] + list(extra)
+        entries = [(self.profiles[m], r / self.headroom) for m, r in pairs]
+        factors = [self.intf_factor(m, let, gpu) for m, _ in pairs]
+        return self.lat.admit(entries, let.frac, factors)
+
+    def _record(self, let: GpuLet, pairs: Sequence[tuple[str, float]],
+                adm: Admission) -> None:
+        """Write admitted (duty, batch, in-cycle completion) onto a gpu-let.
+
+        ``est_latency_ms`` stores the admission's promised in-cycle
+        completion time (launch offset + interference-inflated execution),
+        so the engine and metrics see the same number the scheduler checked
+        against the SLO.
+        """
+        let.assignments = [
+            Assignment(model=m, rate=r, batch=b, duty_ms=adm.duty_ms,
+                       est_latency_ms=est)
+            for (m, r), b, est in zip(pairs, adm.batches, adm.est_latency_ms)]
 
     def assign(self, let: GpuLet, gpu: GpuState, model: str, rate: float) -> bool:
         """Place (model, rate) on a gpu-let if feasible; records duty/batch.
@@ -138,32 +148,21 @@ class SchedulerBase:
         not silently push an earlier one over its SLO (this revalidation is
         what lets gpulet+int "filter out" the violating rates of Fig. 13).
         """
-        ok, duty, batches = self.feasible_with(let, gpu, [(model, rate)])
-        if not ok:
+        adm = self.feasible_with(let, gpu, [(model, rate)])
+        if not adm.ok:
             return False
-        f = self.intf_factor(model, let, gpu)
         saved = list(let.assignments)
-        entries = [(a.model, a.rate) for a in let.assignments] + [(model, rate)]
-        let.assignments = []
-        for (m, r), b in zip(entries, batches):
-            lat = f * self.lat.latency_ms(self.profiles[m], b, let.frac)
-            let.assignments.append(Assignment(
-                model=m, rate=r, batch=b, duty_ms=duty, est_latency_ms=lat))
+        pairs = [(a.model, a.rate) for a in let.assignments] + [(model, rate)]
+        self._record(let, pairs, adm)
         if self.intf_model is not None:
             part = gpu.partner_of(let)
             if part is not None and part.assignments:
-                ok2, duty2, batches2 = self.feasible_with(part, gpu)
-                if not ok2:
+                adm2 = self.feasible_with(part, gpu)
+                if not adm2.ok:
                     let.assignments = saved  # rollback
                     return False
-                fp = max((self.intf_factor(a.model, part, gpu)
-                          for a in part.assignments), default=1.0)
-                part.assignments = [
-                    Assignment(model=a.model, rate=a.rate, batch=b,
-                               duty_ms=duty2,
-                               est_latency_ms=fp * self.lat.latency_ms(
-                                   self.profiles[a.model], b, part.frac))
-                    for a, b in zip(part.assignments, batches2)]
+                self._record(part, [(a.model, a.rate)
+                                    for a in part.assignments], adm2)
         return True
 
     # ---- API ---------------------------------------------------------------

@@ -20,9 +20,7 @@ from __future__ import annotations
 
 from collections.abc import Mapping
 
-from repro.core import latency as latmod
-from repro.core.gpulet import GpuState, fresh_cluster, split
-from repro.core.profiles import ModelProfile
+from repro.core.gpulet import fresh_cluster, split
 from repro.core.scheduler_base import ScheduleResult, SchedulerBase, sorted_by_rate
 
 

@@ -6,9 +6,6 @@ only structurally, exactly as the dry-run requires.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 

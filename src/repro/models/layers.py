@@ -14,8 +14,6 @@ All support GQA (n_kv_heads <= n_heads) and optional sliding windows.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 
 import jax

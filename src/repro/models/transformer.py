@@ -7,7 +7,6 @@ loop over its 26 heterogeneous layers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -24,6 +24,7 @@ the paper's low violation rates are unreachable.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections.abc import Callable, Mapping
 
 from repro.core.profiles import ModelProfile
@@ -34,13 +35,28 @@ from repro.simulator.metrics import SimMetrics, window_metrics
 
 
 class EWMARateTracker:
-    """Per-model EWMA of observed request rates."""
+    """Per-model EWMA of observed request rates.
+
+    A model absent from the observed window counts as an observation of
+    zero: its EWMA decays toward 0 and the entry is dropped once it falls
+    below the 1e-6 req/s noise floor.  Without the decay a model whose
+    traffic stops keeps its last EWMA forever and the controller keeps
+    provisioning partitions for dead models.
+    """
+
+    #: rates below this are noise (sub-request-per-11-days), not load
+    NOISE_FLOOR = 1e-6
 
     def __init__(self, alpha: float = 0.5):
         self.alpha = alpha
         self.rates: dict[str, float] = {}
 
     def update(self, observed: Mapping[str, float]) -> dict[str, float]:
+        for m in list(self.rates):
+            if m not in observed:
+                self.rates[m] *= 1 - self.alpha
+                if self.rates[m] < self.NOISE_FLOOR:
+                    del self.rates[m]
         for m, r in observed.items():
             if m in self.rates:
                 self.rates[m] = self.alpha * r + (1 - self.alpha) * self.rates[m]
@@ -113,10 +129,15 @@ class ServingController:
     def _reschedule(self, ewma: Mapping[str, float],
                     observed: Mapping[str, float]) -> ScheduleResult | None:
         """Shared decision logic for the initial schedule and each tick."""
-        result = self.scheduler.schedule(self._target(ewma, observed))
+        target = self._target(ewma, observed)
+        result = self.scheduler.schedule(target)
         if result.schedulable or self.schedule is None:
             self.schedule = result
-            self.scheduled_rates = dict(ewma)
+            # store what the live schedule was actually provisioned for —
+            # _needs_reschedule compares future load against these, and
+            # comparing against the (lower, margin-free) EWMA instead
+            # triggers spurious re-partitions, each costing a reorg blackout.
+            self.scheduled_rates = target
             return result
         return None  # keep the old schedule if the new rates don't fit
 
@@ -146,7 +167,13 @@ class ServingController:
         """
         self._margin = margin
         horizon_ms = horizon_s * 1e3
-        n_windows = max(1, int(round(horizon_s / self.period_s)))
+        # one record per *engine* window: the engine flushes a window at
+        # every tick (k * period < horizon) plus a short tail at the
+        # horizon, i.e. ceil(horizon / period) windows.  round() here left
+        # trailing engine windows without a record (or records without an
+        # observation) whenever the horizon was not a multiple of the
+        # period.
+        n_windows = max(1, math.ceil(horizon_s / self.period_s - 1e-9))
         streams = []
         for m, fn in rate_fns.items():
             grid = [k * horizon_s / 256 for k in range(257)]

@@ -184,13 +184,23 @@ class EventHeapEngine:
             rt = _LetRt(let, i)
             rt.cycle_start = rt.t = rt.idle_floor = self.now
             for a in let.assignments:
-                prof = self.profiles[a.model]
-                cap = max(a.batch, self.memo.max_batch_under_slo(
-                    prof, let.frac, prof.slo_ms))
-                rt.walk_order.append((a, cap))
                 self._targets.setdefault(a.model, []).append(
                     [i, a.rate, 0.0])
-            rt.walk_order.sort(key=lambda ac: self.profiles[ac[0].model].slo_ms)
+            # EDF launch order, matching the admission test's walk: each
+            # model's catch-up batch cap is derived under its *launch
+            # offset* within the cycle (the previous assignment's promised
+            # in-cycle completion, recorded by the scheduler in
+            # est_latency_ms) so catch-up batches cannot blow the SLO of a
+            # model that launches behind earlier batches.
+            ordered = sorted(let.assignments,
+                             key=lambda a: self.profiles[a.model].slo_ms)
+            offset = 0.0
+            for a in ordered:
+                prof = self.profiles[a.model]
+                cap = max(a.batch, self.memo.max_batch_under_slo(
+                    prof, let.frac, prof.slo_ms, offset_ms=offset))
+                rt.walk_order.append((a, cap))
+                offset = max(offset, a.est_latency_ms)
             self.lets.append(rt)
         for i, li in enumerate(result.gpulets):
             for j, lj in enumerate(result.gpulets):

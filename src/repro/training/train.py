@@ -1,12 +1,10 @@
 """The train step and loop."""
 from __future__ import annotations
 
-import functools
 import time
 from collections.abc import Callable, Iterable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.training.optim import OptimConfig, adamw_init, adamw_update

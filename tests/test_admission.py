@@ -1,0 +1,177 @@
+"""Admission <-> engine contract: what the scheduler admits, the engine serves.
+
+The completion-time-aware admission core (``LatencyProvider.admit``) promises
+that model i's batch, launched in EDF order behind its predecessors'
+batches, completes within ``duty + offset_i + intf_i * L(b_i, p) <= SLO_i``.
+The engine walks the same EDF order, so a static schedule built directly
+from an ``Admission`` must replay with **zero** SLO violations at the
+admitted rates (deterministic, evenly spaced arrivals — burst absorption is
+the scheduler headroom's job, not admission's).
+"""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibrate_profiles
+from repro.core.gpulet import Assignment, GpuLet, GpuState
+from repro.core.latency import (AnalyticGPULatency, MAX_BATCH,
+                                PARTITION_SIZES, duty_cycle_feasible)
+from repro.core.scheduler_base import ScheduleResult
+from repro.simulator import EngineConfig, EventHeapEngine
+from repro.simulator.events import Request
+
+PROFS = calibrate_profiles()
+LAT = AnalyticGPULatency()
+NAMES = sorted(PROFS)
+
+
+def _schedule_from_admission(entries, p, adm) -> ScheduleResult:
+    let = GpuLet(gpu_id=0, size=p)
+    let.assignments = [
+        Assignment(model=prof.name, rate=rate, batch=b,
+                   duty_ms=adm.duty_ms, est_latency_ms=est)
+        for (prof, rate), b, est in zip(entries, adm.batches,
+                                        adm.est_latency_ms)]
+    return ScheduleResult(gpus=[GpuState(0, [let])], schedulable=True)
+
+
+def _evenly_spaced(model, rate, slo_ms, horizon_ms):
+    n = int(rate * horizon_ms / 1e3)
+    return [Request(model=model, arrival_ms=(k + 0.5) / rate * 1e3,
+                    slo_ms=slo_ms) for k in range(n)]
+
+
+@given(models=st.lists(st.sampled_from(NAMES), min_size=1, max_size=3,
+                       unique=True),
+       r1=st.floats(min_value=20.0, max_value=300.0),
+       r2=st.floats(min_value=20.0, max_value=300.0),
+       r3=st.floats(min_value=20.0, max_value=300.0),
+       p=st.sampled_from(PARTITION_SIZES),
+       intf=st.floats(min_value=1.0, max_value=1.25))
+@settings(max_examples=40, deadline=None)
+def test_admitted_entries_replay_with_zero_violations(models, r1, r2, r3,
+                                                      p, intf):
+    entries = [(PROFS[m], r) for m, r in zip(models, (r1, r2, r3))]
+    adm = LAT.admit(entries, p / 100, intf)
+    if not adm.ok:
+        return
+    horizon = 8_000.0
+    reqs = []
+    for prof, rate in entries:
+        reqs.extend(_evenly_spaced(prof.name, rate, prof.slo_ms, horizon))
+    reqs.sort(key=lambda r: r.arrival_ms)
+    eng = EventHeapEngine(PROFS, EngineConfig(horizon_ms=horizon),
+                          schedule=_schedule_from_admission(entries,
+                                                            p, adm))
+    eng.submit(reqs)
+    met = eng.run()
+    assert met.total == len(reqs) and met.total > 0
+    assert met.slo_violations == 0, (
+        adm, [(prof.name, rate) for prof, rate in entries], p, intf)
+
+
+@given(models=st.lists(st.sampled_from(NAMES), min_size=1, max_size=4),
+       r1=st.floats(min_value=1.0, max_value=400.0),
+       r2=st.floats(min_value=1.0, max_value=400.0),
+       r3=st.floats(min_value=1.0, max_value=400.0),
+       r4=st.floats(min_value=1.0, max_value=400.0),
+       p=st.sampled_from(PARTITION_SIZES),
+       intf=st.floats(min_value=1.0, max_value=1.4))
+@settings(max_examples=60, deadline=None)
+def test_new_admission_is_strictly_tighter(models, r1, r2, r3, r4, p, intf):
+    """Wait-aware admission only ever *removes* workloads vs. the old
+    serialization-blind check (duty + intf*L <= SLO with batches launching
+    at the cycle start), and its per-entry bookkeeping is self-consistent."""
+    entries = [(PROFS[m], r) for m, r in zip(models, (r1, r2, r3, r4))]
+    frac = p / 100
+    adm = LAT.admit(entries, frac, intf)
+    if not adm.ok:
+        return
+    # old-style (serialization-blind) acceptance at the same duty cycle
+    exec_sum = 0.0
+    for (prof, rate), b in zip(entries, adm.batches):
+        assert b == max(1, math.ceil(rate * adm.duty_ms / 1e3))
+        assert b <= MAX_BATCH
+        lat = LAT.latency_ms(prof, b, frac)
+        exec_sum += lat
+        assert adm.duty_ms + intf * lat <= prof.slo_ms + 1e-9
+    assert exec_sum <= adm.duty_ms + 1e-9
+    # per-entry bookkeeping: offsets are the EDF-order running completion
+    order = sorted(range(len(entries)),
+                   key=lambda i: entries[i][0].slo_ms)
+    t = 0.0
+    for i in order:
+        prof, _ = entries[i]
+        assert adm.offsets_ms[i] == t
+        t = adm.est_latency_ms[i]
+        assert t == adm.offsets_ms[i] + intf * LAT.latency_ms(
+            prof, adm.batches[i], frac)
+        assert adm.duty_ms + t <= prof.slo_ms + 1e-9
+
+
+def test_serialization_blind_workload_now_rejected():
+    """A shared cycle that only fits if every batch launched at the cycle
+    start must be rejected: the last model's completion (behind its
+    predecessors) would overrun its SLO.  This is the Fig. 13 bug class —
+    the old check admitted these and left the engine to absorb the miss."""
+    found = False
+    for p in PARTITION_SIZES:
+        frac = p / 100
+        for ra in (50, 100, 200, 300, 400):
+            for rb in (50, 100, 200, 300, 400):
+                entries = [(PROFS["res"], float(ra)),
+                           (PROFS["vgg"], float(rb))]
+                adm = LAT.admit(entries, frac)
+                ok_old, duty, batches = _old_blind_check(entries, frac)
+                if ok_old and not adm.ok:
+                    found = True
+                    # the rejected duty really does overrun vgg's SLO once
+                    # the serialization wait is counted
+                    lat_res = LAT.latency_ms(PROFS["res"], batches[0], frac)
+                    lat_vgg = LAT.latency_ms(PROFS["vgg"], batches[1], frac)
+                    assert duty + lat_res + lat_vgg \
+                        > PROFS["vgg"].slo_ms - 1e-9
+                assert not (adm.ok and not ok_old), \
+                    "new admission must be a strict subset of the old one"
+    assert found, "expected at least one workload the old check over-admits"
+
+
+def _old_blind_check(entries, p, intf=1.0, n_grid=24):
+    """The pre-fix admission semantics, kept here as the regression oracle."""
+    slo_min = min(prof.slo_ms for prof, _ in entries)
+    for k in range(n_grid, 0, -1):
+        duty = slo_min * k / n_grid
+        batches, exec_sum, ok = [], 0.0, True
+        for prof, rate in entries:
+            b = max(1, math.ceil(rate * duty / 1e3))
+            if b > MAX_BATCH:
+                ok = False
+                break
+            lat = LAT.latency_ms(prof, b, p)
+            if duty + intf * lat > prof.slo_ms:
+                ok = False
+                break
+            batches.append(b)
+            exec_sum += lat
+        if ok and exec_sum <= duty:
+            return True, duty, batches
+    return False, 0.0, []
+
+
+def test_module_function_and_memo_delegate_to_admit():
+    """Exactly one admission implementation: every entry point agrees."""
+    from repro.core.latency import LatencyMemo
+
+    entries = [(PROFS["goo"], 120.0), (PROFS["res"], 90.0)]
+    for p in (0.2, 0.5, 0.8, 1.0):
+        want = LAT.admit(entries, p)
+        assert duty_cycle_feasible(entries, p) == \
+            (want.ok, want.duty_ms, list(want.batches))
+        assert LatencyMemo().duty_cycle_feasible(entries, p) == \
+            (want.ok, want.duty_ms, list(want.batches))
+        memo = LatencyMemo()
+        assert memo.max_batch_under_slo(PROFS["res"], p, 95.0) == \
+            LAT.max_batch_under_slo(PROFS["res"], p, 95.0)
+        assert memo.max_batch_under_slo(PROFS["res"], p, 95.0,
+                                        offset_ms=25.0) == \
+            LAT.max_batch_under_slo(PROFS["res"], p, 95.0, offset_ms=25.0)

@@ -15,6 +15,50 @@ def test_ewma():
     assert t.rates["a"] == 150.0
 
 
+def test_ewma_decays_absent_models_to_zero():
+    """A model whose traffic stops must not keep its stale EWMA forever:
+    absent models decay toward 0 and drop below the noise floor, so
+    ``_target`` stops provisioning partitions for dead models."""
+    t = EWMARateTracker(alpha=0.5)
+    t.update({"a": 100.0, "b": 64.0})
+    t.update({"a": 100.0})
+    assert t.rates["b"] == 32.0  # one decay step: alpha * 0 + (1-alpha) * 64
+    for _ in range(40):
+        t.update({"a": 100.0})
+    assert "b" not in t.rates, "dead model never dropped"
+    assert t.rates["a"] == 100.0
+
+
+def test_reschedule_stores_provisioned_target_not_ewma():
+    """_needs_reschedule must compare against what the live schedule was
+    provisioned for (the margin/trend-adjusted target), not the raw EWMA —
+    otherwise steady load just above the EWMA triggers a spurious
+    re-partition (and its reorganization blackout) every period."""
+    sched = ElasticPartitioning(PROFS, intf_model=INTF)
+    ctrl = ServingController(sched, PROFS)
+    ctrl._reschedule({"res": 100.0}, {"res": 100.0})
+    # provisioned-for rate carries the safety margin
+    assert ctrl.scheduled_rates["res"] >= 100.0 * ctrl._margin - 1e-9
+    # 112 req/s is >10% above the EWMA (spurious trigger pre-fix) but
+    # within 10% of the 105 req/s the schedule was provisioned for
+    assert not ctrl._needs_reschedule({"res": 112.0})
+    assert ctrl._needs_reschedule({"res": 130.0})
+
+
+def test_period_records_align_with_engine_windows():
+    """horizon not a multiple of the period: one record per *engine*
+    window (ceil(horizon/period) of them), each with an observation."""
+    sched = ElasticPartitioning(PROFS, intf_model=INTF)
+    ctrl = ServingController(sched, PROFS, seed=7)
+    recs = ctrl.run({"res": lambda t: 100.0}, horizon_s=50.0)
+    assert len(recs) == 3  # 20 s + 20 s + 10 s tail
+    assert len(ctrl.engine.window_obs) == 3
+    assert recs[-1].t_start_s == 40.0
+    for r in recs:
+        assert r.observed_rates.get("res", 0.0) > 0.0, \
+            "trailing record lost its engine observation"
+
+
 def test_controller_adapts_partitions():
     sched = ElasticPartitioning(PROFS, intf_model=INTF)
     ctrl = ServingController(sched, PROFS, seed=3)

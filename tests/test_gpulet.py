@@ -1,9 +1,8 @@
 """gpu-let split/merge/partitioning invariants."""
 import pytest
 
-from repro.core.gpulet import (GpuLet, GpuState, enumerate_gpu_partitionings,
-                               fresh_cluster, revert_split, split,
-                               valid_partitioning)
+from repro.core.gpulet import (enumerate_gpu_partitionings, fresh_cluster,
+                               revert_split, split, valid_partitioning)
 
 
 def test_fresh_cluster():

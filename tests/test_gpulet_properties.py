@@ -9,7 +9,7 @@ Invariants under any legal sequence of SPLIT / REVERTSPLIT operations:
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.gpulet import (GpuLet, fresh_cluster, revert_split, split,
+from repro.core.gpulet import (fresh_cluster, revert_split, split,
                                valid_partitioning)
 from repro.core.latency import SPLIT_PAIRS
 

@@ -1,6 +1,4 @@
 """Latency model L(b, p): calibration + invariants."""
-import math
-
 import pytest
 from hypothesis import given, settings, strategies as st
 

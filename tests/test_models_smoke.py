@@ -118,7 +118,6 @@ def test_prefill_decode_matches_forward(arch_id):
 
 def test_sliding_window_decode_matches_windowed_forward():
     """The long_500k ring-buffer cache equals forward with the same window."""
-    import repro.models.transformer as tfm
     cfg = get_smoke_config("yi-9b")
     cfg = dataclasses.replace(cfg, sliding_window=None)
     model = Model(cfg, dtype=jnp.float32)

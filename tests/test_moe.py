@@ -7,7 +7,6 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
-from repro.models import moe as moe_mod
 from repro.models.moe import capacity, moe_apply, moe_init, n_dispatch_groups
 
 

@@ -1,6 +1,4 @@
 """Unit tests for the GSPMD sharding rules (no device mesh needed)."""
-import pytest
-
 from repro.configs import get_config
 from repro.launch.sharding import param_spec_for
 

@@ -1,5 +1,4 @@
 """Discrete-event simulator invariants."""
-import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ElasticPartitioning, calibrate_profiles, fit_default_model

@@ -1,6 +1,5 @@
 """launch/specs applicability + dryrun HLO parsers."""
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.specs import (INPUT_SHAPES, applicable, batch_specs,
