@@ -1,0 +1,142 @@
+"""Fabric scaling: goodput and per-class SLO violations from 1 to 16 nodes.
+
+Beyond-paper (ROADMAP "cluster of clusters"): a weak-scaling sweep of the
+multi-node serving fabric — each node is a 4-GPU paper cluster provisioned
+for ~500 req/s of the mixed paper workload; the fleet rate grows with the
+node count.  Traffic is tiered 20% gold / 50% silver / 30% bronze and
+nodes run with preemption enabled; the router pays a 0.15 ms one-way RPC
+delay per dispatch.  Perfect scaling = flat per-node goodput and flat
+violation rates; the gap is the fabric's dispatch + network overhead.
+
+Emits machine-readable ``BENCH_fabric.json`` at the repo root (benchmark
+trajectory tracking) in addition to the usual CSV rows.
+
+CLI: ``python -m benchmarks.fig_fabric_scaling --tiny`` runs the 2-node,
+2-model CI smoke and exits non-zero on conservation or scaling blow-ups.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import Row, setup
+from repro.core.scenarios import fabric_node_sweep
+from repro.fabric import FabricConfig, NetworkModel, build_fabric, build_trace
+from repro.fabric.priority import CLASS_NAMES
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fabric.json")
+
+#: sweep horizon: 16 nodes x ~500 req/s x 65 s ~= 520k fleet requests
+HORIZON_S = 65.0
+NODE_COUNTS = (1, 2, 4, 8, 16)
+
+
+def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
+              per_node_rates=None, seed: int = 0) -> list[dict]:
+    profs, _intf, _ = setup()
+    out = []
+    for scn in fabric_node_sweep(per_node_rates=per_node_rates,
+                                 node_counts=node_counts):
+        cfg = FabricConfig(horizon_ms=horizon_s * 1e3,
+                           policy="least-loaded",
+                           network=NetworkModel(base_ms=0.15, seed=seed),
+                           preemption=True)
+        t0 = time.perf_counter()
+        fabric = build_fabric(scn, profs, cfg)
+        trace = build_trace(scn, profs, horizon_s, seed=seed)
+        fm = fabric.serve(trace)
+        wall_s = time.perf_counter() - t0
+        per_class = {}
+        for level, pc in sorted(fm.fleet.per_class.items()):
+            per_class[CLASS_NAMES.get(level, str(level))] = {
+                "total": pc["total"],
+                "violations": pc["violations"],
+                "violation_rate": pc["violations"] / max(pc["total"], 1),
+                "dropped": pc["dropped"],
+                "preempted": pc["preempted"],
+            }
+        out.append({
+            "n_nodes": scn.n_nodes,
+            "requests": fm.fleet.total,
+            "completed": fm.fleet.completed,
+            "dropped": fm.fleet.dropped,
+            "goodput_req_s": fm.goodput_req_s,
+            "goodput_per_node_req_s": fm.goodput_req_s / scn.n_nodes,
+            "violation_rate": fm.violation_rate,
+            "per_class": per_class,
+            "preemptions": fm.preemptions,
+            "shed": {str(k): v for k, v in fm.stats.shed.items()},
+            "rerouted": {str(k): v for k, v in fm.stats.rerouted.items()},
+            "wall_s": wall_s,
+        })
+    return out
+
+
+def run(fast: bool = False) -> list[Row]:
+    node_counts = (1, 2) if fast else NODE_COUNTS
+    horizon_s = 10.0 if fast else HORIZON_S
+    sweep = run_sweep(node_counts=node_counts, horizon_s=horizon_s)
+    if not fast:
+        # only the full sweep refreshes the trajectory artifact — the
+        # shrunken --fast config would clobber it with incomparable
+        # numbers under the same keys.
+        payload = {"benchmark": "fabric_scaling", "horizon_s": horizon_s,
+                   "policy": "least-loaded", "preemption": True,
+                   "sweep": sweep}
+        with open(OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    rows = []
+    for s in sweep:
+        cls = " ".join(
+            f"{name}={100*d['violation_rate']:.2f}%"
+            for name, d in s["per_class"].items())
+        rows.append(Row(
+            f"fabric/scaling_{s['n_nodes']}n", s["wall_s"] * 1e6,
+            f"requests={s['requests']} "
+            f"goodput={s['goodput_req_s']:.0f}req/s "
+            f"per_node={s['goodput_per_node_req_s']:.0f}req/s "
+            f"viol={100*s['violation_rate']:.2f}% [{cls}] "
+            f"preempts={s['preemptions']}"))
+    base = sweep[0]["goodput_per_node_req_s"]
+    top = sweep[-1]
+    eff = top["goodput_per_node_req_s"] / base if base else 0.0
+    rows.append(Row(
+        "fabric/scaling_efficiency", 0.0,
+        f"{sweep[0]['n_nodes']}n->{top['n_nodes']}n "
+        f"per-node goodput retention={100*eff:.1f}% "
+        f"(json={os.path.basename(OUT_PATH)})"))
+    return rows
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-node 2-model CI smoke")
+    args = ap.parse_args()
+    if not args.tiny:
+        for row in run():
+            print(row.csv())
+        return 0
+    sweep = run_sweep(node_counts=(1, 2), horizon_s=8.0,
+                      per_node_rates={"goo": 80.0, "res": 60.0})
+    for s in sweep:
+        print(f"fabric-tiny n={s['n_nodes']} requests={s['requests']} "
+              f"viol={100*s['violation_rate']:.2f}% "
+              f"conserved={s['completed'] + s['dropped'] == s['requests']}")
+    for s in sweep:
+        if s["completed"] + s["dropped"] != s["requests"]:
+            print("SMOKE FAIL: request conservation broken")
+            return 1
+        if s["violation_rate"] > 0.10:
+            print(f"SMOKE FAIL: {100*s['violation_rate']:.1f}% violations "
+                  f"at provisioned load on {s['n_nodes']} node(s)")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

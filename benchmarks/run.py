@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.fig13_slo_violation",
     "benchmarks.fig14_fluctuation",
     "benchmarks.fig15_ideal_comparison",
+    "benchmarks.fig_fabric_scaling",
     "benchmarks.kernels_bench",
     "benchmarks.ablations",
     "benchmarks.roofline",

@@ -74,6 +74,114 @@ APPLICATIONS: dict[str, Application] = {
 SCHEDULABILITY_RATES = (0, 200, 400, 600)
 
 
+# Multi-node fabric scenarios (beyond-paper; ROADMAP "cluster of clusters").
+# These are pure *descriptions* — repro.fabric.workload materializes them
+# into request traces, keeping core free of simulator imports.
+
+#: default traffic tiering: 20% gold / 50% silver / 30% bronze
+DEFAULT_PRIORITY_MIX: tuple[tuple[int, float], ...] = \
+    ((0, 0.2), (1, 0.5), (2, 0.3))
+
+#: per-node rates used by the fabric scaling sweep: ~500 req/s of mixed
+#: paper models per 4-GPU node, a comfortably schedulable point so the
+#: sweep measures fabric overhead rather than raw overload.
+SWEEP_NODE_RATES: dict[str, float] = {
+    "le": 200.0, "goo": 120.0, "res": 80.0, "ssd": 60.0, "vgg": 40.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricScenario:
+    """One multi-node serving experiment.
+
+    ``rates`` are *fleet-total* req/s per model.  ``hotspot`` multiplies
+    the rates of ``hot_models`` by ``mult`` inside [t0_s, t1_s] (a flash
+    crowd).  ``fail_at_s`` lists (node_id, t_s) node deaths.
+    ``node_weights`` biases the router's model-affinity policy (skewed
+    per-node popularity — sticky sessions concentrating on few nodes).
+    """
+
+    name: str
+    n_nodes: int
+    rates: dict[str, float]
+    priority_mix: tuple[tuple[int, float], ...] = ((0, 1.0),)
+    node_weights: tuple[float, ...] | None = None
+    hotspot: tuple[float, float, float] | None = None  # (t0_s, t1_s, mult)
+    hot_models: tuple[str, ...] = ()
+    fail_at_s: tuple[tuple[int, float], ...] = ()
+
+    def rate_fn(self, model: str):
+        """Instantaneous fleet rate of ``model`` as a function of t (s)."""
+        base = self.rates.get(model, 0.0)
+        if self.hotspot is None or model not in self.hot_models:
+            return lambda t: base
+        t0, t1, mult = self.hotspot
+
+        def fn(t: float) -> float:
+            return base * mult if t0 <= t < t1 else base
+        return fn
+
+    def peak_rate(self, model: str) -> float:
+        base = self.rates.get(model, 0.0)
+        if self.hotspot is not None and model in self.hot_models:
+            return base * self.hotspot[2]
+        return base
+
+
+def fabric_node_sweep(per_node_rates: dict[str, float] | None = None,
+                      node_counts: tuple[int, ...] = (1, 2, 4, 8, 16),
+                      priority_mix: tuple[tuple[int, float], ...]
+                      = DEFAULT_PRIORITY_MIX) -> list[FabricScenario]:
+    """Weak-scaling sweep: fleet rates grow with the node count."""
+    per_node = per_node_rates or SWEEP_NODE_RATES
+    return [FabricScenario(
+        name=f"sweep-{n}n", n_nodes=n,
+        rates={m: r * n for m, r in per_node.items()},
+        priority_mix=priority_mix) for n in node_counts]
+
+
+def skewed_node_popularity(n_nodes: int, skew: float = 1.2
+                           ) -> tuple[float, ...]:
+    """Zipf(skew) per-node popularity weights, normalized to sum to 1.
+
+    Feeds the router's model-affinity policy: with skew > 0 sticky
+    sessions pile onto the first few nodes, creating exactly the hot-spot
+    imbalance the shed/re-route machinery has to absorb.
+    """
+    w = [1.0 / (i + 1) ** skew for i in range(n_nodes)]
+    total = sum(w)
+    return tuple(x / total for x in w)
+
+
+def hotspot_scenario(n_nodes: int,
+                     per_node_rates: dict[str, float] | None = None,
+                     hot_models: tuple[str, ...] = ("res",),
+                     t0_s: float = 20.0, t1_s: float = 40.0,
+                     mult: float = 3.0,
+                     priority_mix: tuple[tuple[int, float], ...]
+                     = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """A flash crowd: ``hot_models`` burst to ``mult``x inside [t0, t1]."""
+    per_node = per_node_rates or SWEEP_NODE_RATES
+    return FabricScenario(
+        name=f"hotspot-{n_nodes}n", n_nodes=n_nodes,
+        rates={m: r * n_nodes for m, r in per_node.items()},
+        priority_mix=priority_mix, hotspot=(t0_s, t1_s, mult),
+        hot_models=tuple(hot_models))
+
+
+def failure_drain_scenario(n_nodes: int,
+                           per_node_rates: dict[str, float] | None = None,
+                           fail_node: int = 0, fail_at_s: float = 10.0,
+                           priority_mix: tuple[tuple[int, float], ...]
+                           = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """One node dies mid-horizon; survivors absorb its drained traffic."""
+    per_node = per_node_rates or SWEEP_NODE_RATES
+    return FabricScenario(
+        name=f"faildrain-{n_nodes}n", n_nodes=n_nodes,
+        rates={m: r * n_nodes for m, r in per_node.items()},
+        priority_mix=priority_mix,
+        fail_at_s=((fail_node, fail_at_s),))
+
+
 def schedulability_population(models: tuple[str, ...] = ("le", "goo", "res", "ssd", "vgg"),
                               ) -> list[dict[str, float]]:
     """All 4^5 - 1 = 1023 rate vectors of §3.1 / Fig. 4 / Fig. 15."""

@@ -73,6 +73,50 @@ class RooflineLatency(LatencyProvider):
         return T0_MS + 1e3 * sec
 
 
+#: hand-written roofline terms for a no-dry-run container: three archetypes
+#: spanning the behaviours the provider models (KV-cache-bound decode with
+#: batch-scaling traffic, weight-bound small model, compute-heavy MoE).
+#: Magnitudes are per-device seconds at the decode_32k reference shape
+#: (b_ref=128 on a 16x16 pod), in the range real dry-runs produce.
+SYNTHETIC_TERMS: dict[str, ArchTerms] = {
+    "kv-bound-9b": ArchTerms(compute_ref=2e-4, memory_ref=8e-3,
+                             collective_ref=5e-4, b_ref=128, alpha=0.92,
+                             dp_ref=16),
+    "weight-bound-2b": ArchTerms(compute_ref=8e-5, memory_ref=4e-3,
+                                 collective_ref=2e-4, b_ref=128, alpha=0.25,
+                                 dp_ref=16),
+    "moe-16b": ArchTerms(compute_ref=6e-4, memory_ref=6e-3,
+                         collective_ref=1e-3, b_ref=128, alpha=0.60,
+                         dp_ref=16),
+}
+
+
+def _slo_profiles(terms: dict[str, ArchTerms]
+                  ) -> tuple[dict[str, ModelProfile], "RooflineLatency"]:
+    """Profiles (paper-convention SLOs) + provider for a terms catalog."""
+    provider = RooflineLatency(terms)
+    profiles = {}
+    for arch in terms:
+        prof = ModelProfile(
+            name=arch, slo_ms=1.0, flops_per_req=0.0, weight_mb=0.0,
+            act_mb_per_req=0.0, par1=1.0, par_exp=0.0, t0_ms=T0_MS,
+            l2_util_base=0.5)
+        # paper convention: SLO = 2x solo latency at the calibration batch
+        solo = provider.latency_ms(prof, 32, 1.0)
+        profiles[arch] = dataclasses.replace(prof, slo_ms=2.0 * solo)
+    return profiles, provider
+
+
+def synthetic_catalog() -> tuple[dict[str, ModelProfile], "RooflineLatency"]:
+    """(profiles, provider) from :data:`SYNTHETIC_TERMS`.
+
+    Lets the tpu-let serving path run end to end in containers that never
+    executed the compiled dry-run (results/dryrun.jsonl absent); clearly
+    labeled synthetic — numbers are representative, not measured.
+    """
+    return _slo_profiles(dict(SYNTHETIC_TERMS))
+
+
 def _kv_alpha(cfg, seq_len: int, b_ref: int) -> float:
     """Fraction of per-step HBM traffic that scales with batch."""
     param_bytes = cfg.param_count() * 2
@@ -127,7 +171,6 @@ def load_catalog(dryrun_jsonl: str, *, shape: str = "decode_32k",
                 records.setdefault("_prefill_" + r["arch"], r)
 
     terms: dict[str, ArchTerms] = {}
-    profiles: dict[str, ModelProfile] = {}
     for arch, r in list(records.items()):
         if arch.startswith("_prefill_"):
             base = arch.removeprefix("_prefill_")
@@ -147,13 +190,4 @@ def load_catalog(dryrun_jsonl: str, *, shape: str = "decode_32k",
             dp_ref=int(r["mesh"].split("x")[0]),
         )
         terms[arch] = t
-    provider = RooflineLatency(terms)
-    for arch in terms:
-        prof = ModelProfile(
-            name=arch, slo_ms=1.0, flops_per_req=0.0, weight_mb=0.0,
-            act_mb_per_req=0.0, par1=1.0, par_exp=0.0, t0_ms=T0_MS,
-            l2_util_base=0.5)
-        # paper convention: SLO = 2x solo latency at the calibration batch
-        solo = provider.latency_ms(prof, 32, 1.0)
-        profiles[arch] = dataclasses.replace(prof, slo_ms=2.0 * solo)
-    return profiles, provider
+    return _slo_profiles(terms)

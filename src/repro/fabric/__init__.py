@@ -1,0 +1,21 @@
+"""Multi-node serving fabric: cluster-of-clusters dispatch (see README.md).
+
+Each node is a full single-server serving stack (gpu-let partitioning +
+event-heap engine + optional rescheduling controller); a global router
+dispatches the client trace across nodes under a pluggable policy, with
+priority classes, preemption, and a network delay model layered on top.
+"""
+from repro.fabric.fabric import FabricConfig, FabricMetrics, ServingFabric
+from repro.fabric.network import NetworkModel
+from repro.fabric.node import FabricNode, NodeSpec
+from repro.fabric.priority import (BRONZE, GOLD, PRIORITY_CLASSES, SILVER,
+                                   PriorityClass, assign_priorities)
+from repro.fabric.router import POLICIES, DispatchStats, FabricRouter
+from repro.fabric.workload import build_fabric, build_trace
+
+__all__ = [
+    "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
+    "FabricNode", "FabricRouter", "GOLD", "NetworkModel", "NodeSpec",
+    "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
+    "ServingFabric", "assign_priorities", "build_fabric", "build_trace",
+]

@@ -1,0 +1,191 @@
+"""The serving fabric: a cluster of single-server clusters.
+
+``ServingFabric`` composes the pieces: N :class:`FabricNode`\\ s (each a
+full PR-1 serving stack — own gpu-let partitioning, own event-heap engine,
+optionally its own rescheduling controller) behind one
+:class:`FabricRouter` with a network delay model.  One ``serve(trace)``
+call routes the whole client trace, runs every node, handles node
+failures by re-dispatching the casualties to survivors, and folds the
+results into a :class:`FabricMetrics`.
+
+Degenerate case, by construction: a 1-node fabric with zero network delay
+and single-class traffic is event-for-event identical to running the bare
+engine on the same schedule (property-tested in tests/test_fabric.py) —
+the fabric is a strict superset, not a fork, of the single-server path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Mapping, Sequence
+
+from repro.core.elastic import ElasticPartitioning
+from repro.core.hardware import ClusterSpec, PAPER_CLUSTER
+from repro.core.latency import LatencyProvider
+from repro.core.profiles import ModelProfile
+from repro.fabric.network import NetworkModel
+from repro.fabric.node import FabricNode, NodeSpec
+from repro.fabric.router import DispatchStats, FabricRouter
+from repro.simulator.engine import EngineConfig
+from repro.simulator.events import Request
+from repro.simulator.metrics import SimMetrics, collect
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    horizon_ms: float = 20_000.0
+    #: router dispatch policy: least-loaded | slo-headroom | model-affinity
+    policy: str = "least-loaded"
+    network: NetworkModel = dataclasses.field(
+        default_factory=NetworkModel.zero)
+    #: priority-aware nodes: queue ordering + in-flight preemption
+    preemption: bool = False
+    preempt_cost_ms: float = 1.0
+    #: router backlog (ms of queued work) beyond which low-priority
+    #: traffic is re-routed / shed
+    shed_backlog_ms: float = 500.0
+    reroute_level: int = 1
+    shed_level: int = 2
+    #: detection + re-dispatch lag after a node failure
+    failover_ms: float = 1_000.0
+    #: per-node rescheduling controller period; None = static schedules
+    period_s: float | None = None
+    reorg_s: float = 2.0
+    #: pluggable L(b, p) for the node engines (tpu-let path); None = GPU
+    lat: LatencyProvider | None = None
+    interference: bool = True
+
+
+@dataclasses.dataclass
+class FabricMetrics:
+    """Fleet-wide client-perspective metrics + per-node breakdown."""
+
+    fleet: SimMetrics
+    per_node: dict[int, SimMetrics]
+    stats: DispatchStats
+    preemptions: int
+
+    @property
+    def goodput_req_s(self) -> float:
+        return self.fleet.goodput_req_s
+
+    @property
+    def violation_rate(self) -> float:
+        return self.fleet.violation_rate
+
+    def shed_total(self) -> int:
+        return sum(self.stats.shed.values())
+
+
+class ServingFabric:
+    def __init__(self, profiles: Mapping[str, ModelProfile],
+                 nodes: Sequence[FabricNode],
+                 cfg: FabricConfig | None = None,
+                 affinity_weights: dict[int, float] | None = None):
+        self.profiles = dict(profiles)
+        self.cfg = cfg or FabricConfig()
+        self.nodes = list(nodes)
+        self.router = FabricRouter(
+            self.nodes, policy=self.cfg.policy, network=self.cfg.network,
+            shed_backlog_ms=self.cfg.shed_backlog_ms,
+            reroute_level=self.cfg.reroute_level,
+            shed_level=self.cfg.shed_level,
+            affinity_weights=affinity_weights)
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def build(cls, profiles: Mapping[str, ModelProfile],
+              n_nodes: int,
+              rates: Mapping[str, float],
+              cfg: FabricConfig | None = None,
+              node_cluster: ClusterSpec = PAPER_CLUSTER,
+              scheduler_factory=None,
+              fail_at_ms: Mapping[int, float] | None = None,
+              affinity_weights: dict[int, float] | None = None
+              ) -> "ServingFabric":
+        """Stand up an N-node fabric provisioned for fleet-total ``rates``.
+
+        Each node is scheduled independently for an equal 1/N share of the
+        fleet rates (the router balances arrivals, so equal shares are the
+        steady-state expectation).  ``scheduler_factory(profiles, cluster)``
+        returns a scheduler per node; defaults to plain
+        :class:`ElasticPartitioning`.  ``fail_at_ms`` maps node_id -> the
+        wall-clock instant that node dies (failure-drain scenarios).
+        """
+        cfg = cfg or FabricConfig()
+        fail_at_ms = dict(fail_at_ms or {})
+        if scheduler_factory is None:
+            def scheduler_factory(profs, cluster):
+                return ElasticPartitioning(profs, cluster=cluster,
+                                           lat=cfg.lat)
+        share = {m: r / n_nodes for m, r in rates.items() if r > 0}
+        nodes = []
+        for i in range(n_nodes):
+            sched = scheduler_factory(profiles, node_cluster)
+            on_tick = None
+            period_ms = None
+            reorg_ms = 0.0
+            if cfg.period_s is not None:
+                from repro.serving.controller import ServingController
+                ctrl = ServingController(sched, profiles,
+                                         period_s=cfg.period_s,
+                                         reorg_s=cfg.reorg_s)
+                schedule, on_tick = ctrl.make_subscriber(share)
+                period_ms = cfg.period_s * 1e3
+                reorg_ms = cfg.reorg_s * 1e3
+            else:
+                schedule = sched.schedule(share)
+            ecfg = EngineConfig(
+                horizon_ms=cfg.horizon_ms, acc=node_cluster.accelerator,
+                period_ms=period_ms, reorg_ms=reorg_ms,
+                lat=cfg.lat, interference=cfg.interference,
+                preemption=cfg.preemption,
+                preempt_cost_ms=cfg.preempt_cost_ms)
+            spec = NodeSpec(node_id=i, cluster=node_cluster,
+                            fail_at_ms=fail_at_ms.get(i))
+            nodes.append(FabricNode(spec, profiles, schedule, ecfg,
+                                    on_tick=on_tick))
+        return cls(profiles, nodes, cfg, affinity_weights=affinity_weights)
+
+    # ---- serving ----------------------------------------------------------
+
+    def serve(self, requests: list[Request]) -> FabricMetrics:
+        """Route and serve one whole-horizon client trace."""
+        self.router.dispatch(requests)
+        # failing nodes run first (in failure order): their casualties are
+        # re-dispatched to nodes that have not executed yet.
+        failing = sorted((n for n in self.nodes if n.fails_in_run()),
+                         key=lambda n: n.spec.fail_at_ms)
+        for node in failing:
+            node.run()
+            node.retired = True   # router must not target it again
+            lost = node.casualties()
+            replay = []
+            for r in lost:
+                # detection lag: the fleet notices the failure, then
+                # replays the request from the router.  The replay time
+                # becomes the node-side arrival, and the SLO budget
+                # shrinks by the time already burned waiting on the dead
+                # node — so the survivor's SLO verdict stays
+                # client-consistent (same trick as the network delay).
+                t_replay = max(r.arrival_ms, node.spec.fail_at_ms) \
+                    + self.cfg.failover_ms
+                r.slo_ms -= t_replay - r.arrival_ms
+                r.arrival_ms = t_replay
+                if r.slo_ms <= 0.0:
+                    r.dropped = True   # already hopeless: count the loss
+                else:
+                    replay.append(r)
+            if replay:
+                self.router.dispatch(replay, failover=True)
+        for node in self.nodes:
+            if not node.fails_in_run():
+                node.run()
+        fleet = collect(requests, self.cfg.horizon_ms)
+        per_node = {n.node_id: n.metrics for n in self.nodes
+                    if n.metrics is not None}
+        preemptions = sum(n.engine.preemptions for n in self.nodes
+                          if n.engine is not None)
+        return FabricMetrics(fleet=fleet, per_node=per_node,
+                             stats=self.router.stats,
+                             preemptions=preemptions)

@@ -1,0 +1,46 @@
+"""Router <-> node network/RPC delay model.
+
+The fabric's router and its nodes are separate machines: every dispatch
+pays a one-way RPC latency, and the response pays it again on the way
+back.  We model the one-way delay as ``base_ms`` plus optional uniform
+jitter drawn from a seeded generator — deterministic for a fixed seed and
+dispatch order, which keeps fabric runs reproducible.
+
+``NetworkModel.zero()`` (the default) returns exactly 0.0 for every hop;
+with it a 1-node fabric is event-for-event identical to a bare
+:class:`~repro.simulator.engine.EventHeapEngine` (see tests/test_fabric.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NetworkModel:
+    """One-way router->node RPC delay: base + U[0, jitter) per message."""
+
+    def __init__(self, base_ms: float = 0.0, jitter_ms: float = 0.0,
+                 seed: int = 0):
+        self.base_ms = float(base_ms)
+        self.jitter_ms = float(jitter_ms)
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+
+    @classmethod
+    def zero(cls) -> "NetworkModel":
+        return cls(0.0, 0.0)
+
+    @property
+    def is_zero(self) -> bool:
+        return self.base_ms == 0.0 and self.jitter_ms == 0.0
+
+    def delay_ms(self, node_id: int) -> float:
+        """One-way delay for one message to/from ``node_id``."""
+        if self.is_zero:
+            return 0.0
+        if self.jitter_ms <= 0.0:
+            return self.base_ms
+        return self.base_ms + float(self._rng.uniform(0.0, self.jitter_ms))
+
+    def reset(self) -> None:
+        """Rewind the jitter stream (fresh dispatch pass)."""
+        self._rng = np.random.default_rng(self.seed)

@@ -1,0 +1,138 @@
+"""One fabric node: a server wrapping its own event-heap engine.
+
+A node owns a full single-server serving stack — its own gpu-let
+partitioning (:class:`ScheduleResult`), its own
+:class:`~repro.simulator.engine.EventHeapEngine`, and optionally its own
+:class:`~repro.serving.ServingController` wired in as the engine's tick
+subscriber — exactly the PR-1 single-cluster system, replicated per node.
+The router (router.py) never reaches inside a node: it only appends to the
+node's pending trace and reads coarse load signals (provisioned per-model
+rates, gpu-let count).
+
+Node failure (the ROADMAP's failure-drain scenario) is modeled by running
+the engine with its clock hard-capped at ``fail_at_ms``: requests completed
+strictly before the failure survive; everything else (queued, in flight,
+or "completed" after the cut) is a casualty the fabric re-dispatches to
+surviving nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hardware import ClusterSpec, PAPER_CLUSTER
+from repro.core.scheduler_base import ScheduleResult
+from repro.simulator.engine import EngineConfig, EventHeapEngine, TickFn
+from repro.simulator.events import Request
+from repro.simulator.metrics import SimMetrics
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    """Static description of one node."""
+
+    node_id: int
+    cluster: ClusterSpec = PAPER_CLUSTER
+    #: wall-clock (ms) at which this node dies, None = healthy forever
+    fail_at_ms: float | None = None
+
+
+class FabricNode:
+    """Runtime state of one node: pending trace + its engine."""
+
+    def __init__(self, spec: NodeSpec, profiles, schedule: ScheduleResult,
+                 cfg: EngineConfig, on_tick: TickFn | None = None):
+        self.spec = spec
+        self.profiles = dict(profiles)
+        self.schedule = schedule
+        self.cfg = cfg
+        self.on_tick = on_tick
+        self.pending: list[Request] = []
+        self.engine: EventHeapEngine | None = None
+        self.metrics: SimMetrics | None = None
+        #: set by the fabric once this node has executed (failed nodes run
+        #: first); the router must not dispatch anything more to it.
+        self.retired = False
+        # router-visible load signals, derived from the partitioning
+        self.rate_by_model: dict[str, float] = \
+            schedule.assignments_by_model()
+        self.n_servers = max(
+            1, sum(1 for l in schedule.gpulets if not l.is_free))
+        self.total_rate = sum(self.rate_by_model.values())
+
+    @property
+    def node_id(self) -> int:
+        return self.spec.node_id
+
+    def alive_at(self, t_ms: float) -> bool:
+        if self.retired:
+            return False
+        f = self.spec.fail_at_ms
+        return f is None or t_ms < f
+
+    def fails_in_run(self) -> bool:
+        """True iff the scheduled failure lands inside the horizon — a
+        failure at/after the horizon never happens in this run, and the
+        node must behave exactly like a healthy one (no clock cap, no
+        casualty collection)."""
+        f = self.spec.fail_at_ms
+        return f is not None and f < self.cfg.horizon_ms
+
+    def serves(self, model: str) -> bool:
+        return self.rate_by_model.get(model, 0.0) > 0.0
+
+    def service_ms(self, model: str) -> float:
+        """Per-request occupancy for the router's fluid backlog model.
+
+        Normalized so that inflow at exactly the provisioned aggregate
+        rate balances the drain (``n_servers`` ms/ms): the node's
+        provisioned rates ARE its admitted capacity, so the router's
+        backlog only grows when a node genuinely runs hot.
+        """
+        if self.rate_by_model.get(model, 0.0) <= 0.0:
+            return 1e6  # not provisioned here: effectively infinite cost
+        return self.n_servers * 1e3 / max(self.total_rate, 1e-9)
+
+    def run(self) -> SimMetrics:
+        """Run this node's engine over its dispatched trace."""
+        cfg = self.cfg
+        if self.fails_in_run():
+            # hard-stop the node's clock at the failure instant; the fabric
+            # collects the casualties afterwards (see ServingFabric.serve).
+            cfg = dataclasses.replace(cfg, horizon_ms=self.spec.fail_at_ms,
+                                      drain_factor=1.0)
+        self.engine = EventHeapEngine(self.profiles, cfg,
+                                      schedule=self.schedule,
+                                      on_tick=self.on_tick)
+        self.engine.submit(self.pending)
+        self.metrics = self.engine.run()
+        return self.metrics
+
+    def casualties(self) -> list[Request]:
+        """Requests lost to this node's failure, reset for re-dispatch.
+
+        Only meaningful after :meth:`run` on a node with ``fail_at_ms``.
+        A casualty is a request that was *in the node's hands* when it
+        died: still queued at the cut (``unserved`` conservation drops),
+        or in a batch whose completion the engine stamped at/after the
+        cut.  Requests the node finished before dying survive as
+        completions, and requests it *deliberately* dropped for SLO
+        expiry while healthy stay dropped — the client already saw that
+        rejection; replaying them would under-count violations.
+        """
+        fail = self.spec.fail_at_ms
+        if not self.fails_in_run() or self.engine is None:
+            return []
+        lost = []
+        for r in self.engine.requests:
+            if r.dropped and r.unserved:
+                pass                                  # queued at the cut
+            elif r.completion_ms is not None and not r.dropped \
+                    and r.completion_ms >= fail:
+                pass                                  # in flight at the cut
+            else:
+                continue
+            r.completion_ms = None
+            r.dropped = False
+            r.unserved = False
+            lost.append(r)
+        return lost

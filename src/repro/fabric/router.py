@@ -1,0 +1,231 @@
+"""Global request router: fleet-level dispatch under a pluggable policy.
+
+The router makes one pass over the client trace in arrival order and
+assigns every request to a node *at its arrival instant* — matching a real
+front-end that routes on what it can observe (its own dispatch history and
+each node's provisioned capacity), never on node-internal queue state.
+
+Load signal
+-----------
+Per node the router keeps a virtual backlog ``backlog_ms``: every dispatch
+adds the request's estimated occupancy (1e3 / provisioned req/s of its
+model on that node) and the backlog drains continuously at ``n_servers``
+milliseconds per millisecond (the node's occupied gpu-lets serve in
+parallel).  This is an M/M/k-style fluid estimate, not ground truth — the
+point is that the router is *honestly ignorant* of node internals.
+
+Policies
+--------
+  * ``least-loaded``      — smallest backlog among nodes serving the model.
+  * ``slo-headroom``      — largest provisioned-rate headroom for the
+    request's model (provisioned req/s minus the router's own recent
+    dispatch rate), normalized by provisioned rate; ties fall to backlog.
+  * ``model-affinity``    — sticky: prefer the node with the highest
+    static affinity weight for the model (sessions hash to the same node),
+    spilling to the next-preferred node only when the favorite is backed
+    up.
+
+Priority handling (see priority.py): levels >= ``reroute_level`` are
+re-routed to the least-backlogged node when the policy's choice is over
+the shed threshold; levels >= ``shed_level`` are dropped outright when
+*every* live candidate is over it.  GOLD (level 0) is always dispatched
+to the policy's choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+from repro.fabric.network import NetworkModel
+from repro.fabric.node import FabricNode
+from repro.simulator.events import Request
+
+#: floor for the node-side SLO after subtracting network round-trip
+MIN_NODE_SLO_MS = 1e-3
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Router-side accounting for one dispatch pass."""
+
+    dispatched: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: deliberately dropped low-priority traffic (overload valve), by class
+    shed: dict[int, int] = dataclasses.field(default_factory=dict)
+    rerouted: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: fleet-down losses (no live node at dispatch time), by class — kept
+    #: apart from ``shed`` because gold is never *deliberately* dropped
+    lost: dict[int, int] = dataclasses.field(default_factory=dict)
+    failed_over: int = 0
+
+    def count(self, d: dict[int, int], key: int) -> None:
+        d[key] = d.get(key, 0) + 1
+
+
+class _NodeLoad:
+    """Router-local fluid view of one node."""
+
+    __slots__ = ("node", "backlog_ms", "last_ms", "win_counts", "win_start")
+
+    def __init__(self, node: FabricNode):
+        self.node = node
+        self.backlog_ms = 0.0
+        self.last_ms = 0.0
+        self.win_counts: dict[str, int] = {}
+        self.win_start = 0.0
+
+    def drain_to(self, t_ms: float) -> None:
+        dt = t_ms - self.last_ms
+        if dt > 0:
+            self.backlog_ms = max(
+                0.0, self.backlog_ms - dt * self.node.n_servers)
+            self.last_ms = t_ms
+
+    def reset(self, t_ms: float) -> None:
+        self.backlog_ms = 0.0
+        self.last_ms = t_ms
+        self.win_counts = {}
+        self.win_start = t_ms
+
+    def observed_rate(self, model: str, t_ms: float) -> float:
+        span_s = max(t_ms - self.win_start, 1e3) / 1e3
+        return self.win_counts.get(model, 0) / span_s
+
+    def note(self, model: str, t_ms: float, window_ms: float) -> None:
+        if t_ms - self.win_start > window_ms:
+            self.win_counts = {}
+            self.win_start = t_ms
+        self.win_counts[model] = self.win_counts.get(model, 0) + 1
+
+
+class FabricRouter:
+    def __init__(self, nodes: list[FabricNode],
+                 policy: str = "least-loaded",
+                 network: NetworkModel | None = None,
+                 shed_backlog_ms: float = 500.0,
+                 reroute_level: int = 1,
+                 shed_level: int = 2,
+                 affinity_weights: dict[int, float] | None = None,
+                 rate_window_ms: float = 5_000.0):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"one of {sorted(POLICIES)}")
+        self.nodes = nodes
+        self.policy = policy
+        self.network = network or NetworkModel.zero()
+        self.shed_backlog_ms = shed_backlog_ms
+        self.reroute_level = reroute_level
+        self.shed_level = shed_level
+        self.rate_window_ms = rate_window_ms
+        #: node_id -> static popularity weight (model-affinity policy);
+        #: defaults to uniform.  Skewed weights model a fleet whose sticky
+        #: sessions concentrate on a few nodes (core/scenarios.py).
+        self.affinity_weights = affinity_weights or {}
+        self._loads = [_NodeLoad(n) for n in nodes]
+        self.stats = DispatchStats()
+
+    # ---- policy scoring ---------------------------------------------------
+
+    def _candidates(self, r: Request, t_ms: float) -> list[_NodeLoad]:
+        cands = [ld for ld in self._loads
+                 if ld.node.alive_at(t_ms) and ld.node.serves(r.model)]
+        if not cands:  # nobody provisioned for the model: any live node
+            cands = [ld for ld in self._loads if ld.node.alive_at(t_ms)]
+        return cands
+
+    def _choose(self, r: Request, cands: list[_NodeLoad],
+                t_ms: float) -> _NodeLoad:
+        if self.policy == "least-loaded":
+            return min(cands, key=lambda ld: (ld.backlog_ms,
+                                              ld.node.node_id))
+        if self.policy == "slo-headroom":
+            def headroom(ld: _NodeLoad) -> float:
+                prov = ld.node.rate_by_model.get(r.model, 0.0)
+                if prov <= 0.0:
+                    return -1.0
+                return (prov - ld.observed_rate(r.model, t_ms)) / prov
+            return max(cands, key=lambda ld: (headroom(ld), -ld.backlog_ms,
+                                              -ld.node.node_id))
+        # model-affinity: weighted rendezvous hashing — each model gets a
+        # deterministic per-node preference order (sticky sessions), and a
+        # node's chance of being some model's favorite is proportional to
+        # its popularity weight; spill down the order only when backed up.
+        # zlib.crc32, not hash(): str hashes are salted per process and
+        # would break run-to-run determinism.
+        def pref(ld: _NodeLoad) -> tuple:
+            w = max(self.affinity_weights.get(ld.node.node_id, 1.0), 1e-9)
+            u32 = zlib.crc32(f"{r.model}:{ld.node.node_id}".encode())
+            h = (u32 + 1.0) / (2**32 + 2.0)     # in (0, 1)
+            return (-(h ** (1.0 / w)), ld.node.node_id)
+        ordered = sorted(cands, key=pref)
+        for ld in ordered:
+            if ld.backlog_ms <= self.shed_backlog_ms:
+                return ld
+        return ordered[0]
+
+    # ---- dispatch ---------------------------------------------------------
+
+    def dispatch(self, requests: list[Request],
+                 failover: bool = False) -> DispatchStats:
+        """Assign each request to a node; mutates requests for network lag.
+
+        A dispatched request's ``arrival_ms`` is shifted by the forward
+        RPC delay and its node-side SLO budget shrinks by the round trip,
+        so a node-side SLO verdict equals the client-side one.  Shed
+        requests are marked dropped and never reach a node.
+
+        ``failover=True`` marks a casualty-replay pass, which happens
+        *after* the primary pass has walked the whole horizon — the fluid
+        load view is therefore stale (end-of-horizon backlog, regressed
+        clocks).  Rather than judge replays against state the router
+        could never have had at the replay instant, the view restarts
+        from zero at the first replay time: replays spread by the
+        policy's static signals plus the backlog they themselves build.
+        """
+        reqs = sorted(requests, key=lambda r: r.arrival_ms)
+        if failover and reqs:
+            for ld in self._loads:
+                ld.reset(reqs[0].arrival_ms)
+        for r in reqs:
+            t = r.arrival_ms
+            for ld in self._loads:
+                ld.drain_to(t)
+            cands = self._candidates(r, t)
+            if not cands:
+                # no live node at all: the fleet is down, request is lost
+                r.dropped = True
+                self.stats.count(self.stats.lost, r.priority)
+                continue
+            ld = self._choose(r, cands, t)
+            if ld.backlog_ms > self.shed_backlog_ms \
+                    and r.priority >= self.reroute_level:
+                alt = min(cands, key=lambda c: (c.backlog_ms,
+                                                c.node.node_id))
+                if alt.backlog_ms > self.shed_backlog_ms:
+                    if r.priority >= self.shed_level:
+                        r.dropped = True
+                        self.stats.count(self.stats.shed, r.priority)
+                        continue
+                elif alt is not ld:
+                    ld = alt
+                    self.stats.count(self.stats.rerouted, r.priority)
+            self._send(r, ld, t)
+            if failover:
+                self.stats.failed_over += 1
+        return self.stats
+
+    # ---- plumbing ---------------------------------------------------------
+
+    def _send(self, r: Request, ld: _NodeLoad, t_ms: float) -> None:
+        node = ld.node
+        d = self.network.delay_ms(node.node_id)
+        if d > 0.0:
+            r.arrival_ms += d
+            r.slo_ms = max(r.slo_ms - 2.0 * d, MIN_NODE_SLO_MS)
+        ld.backlog_ms += node.service_ms(r.model)
+        ld.note(r.model, t_ms, self.rate_window_ms)
+        node.pending.append(r)
+        self.stats.count(self.stats.dispatched, node.node_id)
+
+
+POLICIES: tuple[str, ...] = ("least-loaded", "slo-headroom",
+                             "model-affinity")

@@ -1,0 +1,61 @@
+"""Materialize a FabricScenario into a client request trace + a fabric.
+
+core/scenarios.py describes multi-node experiments as pure data; this
+module turns one into (a) a whole-horizon, priority-tagged Poisson trace
+and (b) a ready-to-serve :class:`ServingFabric` provisioned for it.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+
+from repro.core.profiles import ModelProfile
+from repro.core.scenarios import FabricScenario
+from repro.fabric.fabric import FabricConfig, ServingFabric
+from repro.fabric.priority import assign_priorities
+from repro.simulator.events import PoissonArrivals, Request, merge_sorted
+
+
+def build_trace(scn: FabricScenario,
+                profiles: Mapping[str, ModelProfile],
+                horizon_s: float, seed: int = 0) -> list[Request]:
+    """Fleet-total arrival trace for one scenario, priorities assigned.
+
+    Constant-rate models use the homogeneous generator; hot-spot models go
+    through thinning against their burst peak.  Priorities are tagged
+    i.i.d. from the scenario's mix, deterministically per seed.
+    """
+    gen = PoissonArrivals(seed=seed)
+    horizon_ms = horizon_s * 1e3
+    streams = []
+    for m, r in sorted(scn.rates.items()):
+        if r <= 0 or m not in profiles:
+            continue
+        slo = profiles[m].slo_ms
+        if scn.hotspot is not None and m in scn.hot_models:
+            fn = scn.rate_fn(m)
+            streams.append(gen.time_varying(
+                m, lambda t, fn=fn: fn(t / 1e3), scn.peak_rate(m) + 1e-9,
+                slo, horizon_ms))
+        else:
+            streams.append(gen.constant(m, r, slo, horizon_ms))
+    reqs = merge_sorted(streams)
+    assign_priorities(reqs, dict(scn.priority_mix), seed=seed + 1)
+    return reqs
+
+
+def build_fabric(scn: FabricScenario,
+                 profiles: Mapping[str, ModelProfile],
+                 cfg: FabricConfig | None = None,
+                 **build_kwargs) -> ServingFabric:
+    """Provision a fabric for the scenario's steady-state (non-burst) rates.
+
+    Hot-spot surges and node failures are deliberately *not* provisioned
+    for — absorbing them via shed/re-route/preempt is the experiment.
+    """
+    weights = None
+    if scn.node_weights is not None:
+        weights = {i: w for i, w in enumerate(scn.node_weights)}
+    return ServingFabric.build(
+        profiles, scn.n_nodes, scn.rates, cfg=cfg,
+        fail_at_ms={i: t * 1e3 for i, t in scn.fail_at_s},
+        affinity_weights=weights, **build_kwargs)

@@ -154,6 +154,24 @@ class ServingController:
              self.schedule.used_partition_total()))
         return applied
 
+    def make_subscriber(self, init_rates: Mapping[str, float]
+                        ) -> tuple[ScheduleResult, Callable]:
+        """Prime a deployment-time schedule; return (schedule, on_tick).
+
+        For an externally-owned engine — the serving fabric wires one
+        engine per node and needs each node's controller as a plain tick
+        subscriber.  The caller installs the returned schedule and fires
+        the ticks; :meth:`run` remains the self-contained single-server
+        entry point on top of this.
+        """
+        init = dict(init_rates)
+        ewma0 = self.tracker.update(init)
+        self._prev_obs = dict(init)
+        self._reschedule(ewma0, init)
+        self._decisions = [(dict(ewma0), True,
+                            self.schedule.used_partition_total())]
+        return self.schedule, self._on_tick
+
     def run(self, rate_fns: Mapping[str, Callable[[float], float]],
             horizon_s: float, margin: float = 1.05) -> list[PeriodRecord]:
         """Simulate ``horizon_s`` seconds of serving with fluctuating rates.
@@ -184,12 +202,7 @@ class ServingController:
         reqs = merge_sorted(streams)
 
         # deployment-time estimate: schedule the t=0 instantaneous rates.
-        init = {m: fn(0.0) for m, fn in rate_fns.items()}
-        ewma0 = self.tracker.update(init)
-        self._prev_obs = dict(init)
-        self._reschedule(ewma0, init)
-        self._decisions = [(dict(ewma0), True,
-                            self.schedule.used_partition_total())]
+        self.make_subscriber({m: fn(0.0) for m, fn in rate_fns.items()})
 
         engine = EventHeapEngine(
             self.profiles,

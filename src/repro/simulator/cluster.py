@@ -1,11 +1,15 @@
-"""Compatibility shim: one-shot simulation of a static schedule.
+"""Deprecated compatibility shim: one-shot simulation of a static schedule.
 
-The real simulator now lives in ``engine.py`` — an event-heap discrete-event
-engine that owns request queues and gpu-let state across the whole horizon
-and supports mid-flight rescheduling.  This module keeps the historical
-entry point ``simulate_schedule(result, profiles, requests, cfg)`` (used by
-the benchmarks, examples, and tests) as a thin wrapper: it builds an engine
-with a single static ``ScheduleResult`` and runs the trace to completion.
+.. deprecated::
+    ``simulate_schedule`` predates both the event-heap engine (PR 1) and
+    the multi-node serving fabric (``repro.fabric``).  It is kept so the
+    historical benchmarks/examples/tests keep running, but it is now a
+    thin veneer over the fabric's single-node path — there is exactly one
+    serving entry point (:class:`repro.fabric.ServingFabric`), and a
+    1-node fabric with zero network delay is event-for-event identical to
+    the bare engine (property-tested in tests/test_fabric.py).  New code
+    should build a ``ServingFabric`` (multi-node) or an
+    ``EventHeapEngine`` (single server) directly.
 
 Simplifications vs. real hardware (inherited by the engine), recorded for
 honesty:
@@ -21,10 +25,10 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Mapping
 
-from repro.core.hardware import AcceleratorSpec, RTX_2080TI
+from repro.core.hardware import AcceleratorSpec, ClusterSpec, RTX_2080TI
 from repro.core.profiles import ModelProfile
 from repro.core.scheduler_base import ScheduleResult
-from repro.simulator.engine import EngineConfig, EventHeapEngine
+from repro.simulator.engine import EngineConfig
 from repro.simulator.events import Request
 from repro.simulator.metrics import SimMetrics
 
@@ -39,9 +43,16 @@ def simulate_schedule(result: ScheduleResult,
                       profiles: Mapping[str, ModelProfile],
                       requests: list[Request],
                       cfg: SimConfig | None = None) -> SimMetrics:
+    """Serve ``requests`` on a static schedule via a 1-node fabric."""
+    from repro.fabric import FabricConfig, FabricNode, NodeSpec, ServingFabric
     cfg = cfg or SimConfig()
-    engine = EventHeapEngine(
-        profiles, EngineConfig(horizon_ms=cfg.horizon_ms, acc=cfg.acc),
-        schedule=result)
-    engine.submit(requests)
-    return engine.run()
+    node = FabricNode(
+        NodeSpec(node_id=0, cluster=ClusterSpec(accelerator=cfg.acc)),
+        profiles, result,
+        EngineConfig(horizon_ms=cfg.horizon_ms, acc=cfg.acc))
+    fabric = ServingFabric(profiles, [node],
+                           FabricConfig(horizon_ms=cfg.horizon_ms))
+    fabric.serve(requests)
+    # the node's own metrics carry per-gpu-let busy time, which the
+    # fleet-level aggregate does not — callers of this shim expect it.
+    return node.metrics

@@ -46,7 +46,7 @@ from collections.abc import Callable, Mapping, Sequence
 
 from repro.core.hardware import AcceleratorSpec, RTX_2080TI
 from repro.core.interference import true_interference_factors
-from repro.core.latency import LatencyMemo
+from repro.core.latency import LatencyMemo, LatencyProvider
 from repro.core.profiles import ModelProfile
 from repro.core.scheduler_base import ScheduleResult
 from repro.simulator.events import Request
@@ -75,6 +75,22 @@ class EngineConfig:
     #: hard stop for the drain phase after the horizon (guards pathological
     #: overload traces, mirroring cluster.py's max-clock guard).
     drain_factor: float = 8.0
+    #: pluggable L(b, p) source; None = the calibrated analytic GPU model.
+    #: The tpu-let path passes core/tpulets.RooflineLatency here.
+    lat: LatencyProvider | None = None
+    #: apply ground-truth pairwise interference between co-located gpu-lets.
+    #: tpu-lets are disjoint sub-meshes (no shared SMs/L2), so the TPU path
+    #: disables this.
+    interference: bool = True
+    #: priority-aware serving: queues order by priority class (0 = most
+    #: important) and a strictly-lower-priority in-flight batch may be
+    #: preempted when an arriving request's SLO cannot survive waiting it
+    #: out.  Off by default: the single-tenant engine is priority-blind and
+    #: byte-identical to pre-fabric behavior.
+    preemption: bool = False
+    #: modeled cost of tearing down a preempted batch before the gpu-let
+    #: can launch again (kernel drain + context flip).
+    preempt_cost_ms: float = 1.0
 
 
 class _LetRt:
@@ -82,13 +98,17 @@ class _LetRt:
 
     __slots__ = ("let", "idx", "partner", "duty", "walk_order", "queues",
                  "cycle_start", "t", "slot", "inflight", "pending",
-                 "idle_floor")
+                 "idle_floor", "gen", "inflight_reqs", "inflight_prio")
 
     def __init__(self, let, idx: int):
         self.let = let
         self.idx = idx
         self.partner: _LetRt | None = None
         self.duty = max((a.duty_ms for a in let.assignments), default=1.0)
+        #: bumped on preemption so the cancelled batch's COMPLETE is stale
+        self.gen = 0
+        self.inflight_reqs: list = []
+        self.inflight_prio = 0    # best (lowest) priority level in flight
         #: (assignment, catch-up batch cap) in launch order — tightest SLO
         #: first.  The scheduler's duty-cycle admission (``duty + L <= SLO``)
         #: assumes a model's batch launches at the cycle start; EDF ordering
@@ -130,7 +150,8 @@ class EventHeapEngine:
         self.profiles = dict(profiles)
         self.cfg = cfg or EngineConfig()
         self.on_tick = on_tick
-        self.memo = LatencyMemo(self.cfg.acc)
+        self.memo = LatencyMemo(self.cfg.acc, inner=self.cfg.lat)
+        self.preemptions = 0
         self._intf_cache: dict[tuple, float] = {}
         self._heap: list[tuple] = []
         self._seq = 0
@@ -231,7 +252,19 @@ class EventHeapEngine:
                 best = entry
         best[2] -= total
         rt = self.lets[int(best[0])]
-        rt.queues[r.model].append(r)
+        q = rt.queues[r.model]
+        if not self.cfg.preemption or not q or q[-1].priority <= r.priority:
+            q.append(r)
+        else:
+            # keep the queue sorted by priority level (FIFO within a level):
+            # scan from the right — arrivals are mostly same-class bursts.
+            i = len(q)
+            while i > 0 and q[i - 1].priority > r.priority:
+                i -= 1
+            q.insert(i, r)
+        if self.cfg.preemption and rt.inflight is not None \
+                and rt.inflight_prio > r.priority:
+            self._maybe_preempt(rt, r)
         if not rt.pending and rt.inflight is None:
             self._kick(rt)
 
@@ -251,6 +284,70 @@ class EventHeapEngine:
             self._push(start, WAKE, (self.epoch, rt.idx))
         else:
             self._walk(rt)
+
+    # ---- priority preemption ---------------------------------------------
+
+    def _maybe_preempt(self, rt: _LetRt, r: Request) -> None:
+        """Preempt rt's lower-priority in-flight batch iff it saves r's SLO.
+
+        Preempting always wastes the unfinished execution plus a modeled
+        teardown cost, so it only happens when (a) waiting out the batch
+        would blow ``r``'s SLO, (b) serving ``r`` right after the teardown
+        still fits the SLO, and (c) the remaining execution is longer than
+        the teardown itself.
+        """
+        _model, _b, _start, done = rt.inflight
+        remaining = done - self.now
+        cost = self.cfg.preempt_cost_ms
+        if remaining <= cost:
+            return
+        prof = self.profiles[r.model]
+        est = self.memo.latency_ms(prof, 1, rt.let.frac)
+        slack = r.slo_ms - (self.now - r.arrival_ms)
+        if remaining + est <= slack or cost + est > slack:
+            return
+        self._preempt(rt, first_model=r.model)
+
+    def _preempt(self, rt: _LetRt, first_model: str | None = None) -> None:
+        """Cancel rt's in-flight batch; its requests re-queue un-completed.
+
+        ``first_model`` restarts the walk at that model's slot so the
+        preempting request launches right after the teardown — without it
+        the walk would restart at slot 0 and could immediately relaunch
+        the batch it just tore down (whenever the preempted model sits
+        earlier in EDF order), defeating the preemption.
+        """
+        model, b, _start, done = rt.inflight
+        cost = self.cfg.preempt_cost_ms
+        key = (self.epoch, rt.idx)
+        # the unfinished tail of the batch never executes; the teardown does.
+        self.busy_ms[key] = self.busy_ms.get(key, 0.0) - (done - self.now) \
+            + cost
+        q = rt.queues[model]
+        for r in reversed(rt.inflight_reqs):
+            r.completion_ms = None
+            r.preempted = True
+            # head of its own class segment: the preempted batch holds the
+            # oldest requests of its level, so it re-runs before same-level
+            # arrivals but never jumps a more important one.
+            i = 0
+            while i < len(q) and q[i].priority < r.priority:
+                i += 1
+            q.insert(i, r)
+        self.preemptions += 1
+        self.log.append(("preempt", self.now, rt.idx, model, b))
+        rt.inflight = None
+        rt.inflight_reqs = []
+        rt.gen += 1               # the pending COMPLETE event is now stale
+        rt.slot = 0
+        if first_model is not None:
+            for k, (a, _cap) in enumerate(rt.walk_order):
+                if a.model == first_model:
+                    rt.slot = k
+                    break
+        rt.cycle_start = rt.t = self.now + cost
+        rt.pending = True
+        self._push(rt.t, WAKE, (self.epoch, rt.idx))
 
     # ---- the duty-cycle walk (event-driven port of cluster.py) -----------
 
@@ -305,19 +402,21 @@ class EventHeapEngine:
             for r in batch:
                 r.completion_ms = done
             rt.inflight = (a.model, b, rt.t, done)
+            rt.inflight_reqs = batch
+            rt.inflight_prio = min(r.priority for r in batch)
             rt.pending = True
             key = (self.epoch, rt.idx)
             self.busy_ms[key] = self.busy_ms.get(key, 0.0) + exec_ms
             self.log.append(("batch", self.epoch, rt.idx, rt.t, done,
                              a.model, b))
             rt.t = done
-            self._push(done, COMPLETE, (self.epoch, rt.idx))
+            self._push(done, COMPLETE, (self.epoch, rt.idx, rt.gen))
             return
 
     def _intf(self, rt: _LetRt, model: str, b: int) -> float:
         """Ground-truth slowdown if the partner has a batch in flight."""
         p = rt.partner
-        if p is None or p.inflight is None:
+        if p is None or p.inflight is None or not self.cfg.interference:
             return 1.0
         pm, pb, _ps, pe = p.inflight
         if pe <= rt.t:
@@ -408,12 +507,15 @@ class EventHeapEngine:
             if kind == ARRIVAL:
                 pass  # ingestion above did the work
             elif kind == COMPLETE:
-                epoch, idx = data
+                epoch, idx, gen = data
                 if epoch != self.epoch:
                     continue  # stale: pre-reorg batch on a retired gpu-let
                 rt = self.lets[idx]
+                if gen != rt.gen:
+                    continue  # stale: the batch was preempted
                 rt.pending = False
                 rt.inflight = None
+                rt.inflight_reqs = []
                 if not self.paused:
                     self._walk(rt)
             elif kind == WAKE:
@@ -444,6 +546,7 @@ class EventHeapEngine:
             for r in q:
                 if r.completion_ms is None and not r.dropped:
                     r.dropped = True
+                    r.unserved = True
                     self.log.append(("drop", self.now, r.model))
         return self.metrics()
 

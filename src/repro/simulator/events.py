@@ -21,6 +21,18 @@ class Request:
     # filled by the simulator:
     completion_ms: float | None = None
     dropped: bool = False
+    #: priority class level, 0 = most important (see fabric/priority.py).
+    #: Single-tenant traces leave the default; only the fabric's preemptive
+    #: path ever looks at it.
+    priority: int = 0
+    #: True if an in-flight batch holding this request was ever preempted
+    #: (the request itself may still complete within SLO afterwards).
+    preempted: bool = False
+    #: True for conservation drops: still queued when the engine's clock
+    #: stopped (horizon drain, or a fabric node dying), as opposed to a
+    #: deliberate SLO-expiry drop at batch formation.  The fabric's
+    #: failure-drain path replays only these.
+    unserved: bool = False
 
     @property
     def latency_ms(self) -> float | None:

@@ -13,8 +13,18 @@ class SimMetrics:
     completed: int = 0
     dropped: int = 0
     slo_violations: int = 0       # completed late + dropped
+    preempted: int = 0            # requests whose batch was ever preempted
     per_model: dict = dataclasses.field(default_factory=dict)
+    #: priority level -> dict(total, completed, dropped, violations,
+    #: preempted); single-class traces collapse to one level-0 entry.
+    per_class: dict = dataclasses.field(default_factory=dict)
     busy_ms_per_gpulet: dict = dataclasses.field(default_factory=dict)
+
+    def class_violation_rate(self, level: int) -> float:
+        pc = self.per_class.get(level)
+        if not pc or not pc["total"]:
+            return 0.0
+        return pc["violations"] / pc["total"]
 
     @property
     def violation_rate(self) -> float:
@@ -65,17 +75,28 @@ def collect(requests: list[Request], horizon_ms: float,
         m.total += 1
         pm = m.per_model.setdefault(
             r.model, dict(total=0, violations=0, dropped=0, completed=0))
+        pc = m.per_class.setdefault(
+            r.priority, dict(total=0, violations=0, dropped=0, completed=0,
+                             preempted=0))
         pm["total"] += 1
+        pc["total"] += 1
+        if r.preempted:
+            m.preempted += 1
+            pc["preempted"] += 1
         if r.dropped:
             m.dropped += 1
             m.slo_violations += 1
             pm["dropped"] += 1
             pm["violations"] += 1
+            pc["dropped"] += 1
+            pc["violations"] += 1
             continue
         if r.completion_ms is not None:
             m.completed += 1
             pm["completed"] += 1
+            pc["completed"] += 1
             if r.violated:
                 m.slo_violations += 1
                 pm["violations"] += 1
+                pc["violations"] += 1
     return m

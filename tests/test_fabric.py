@@ -1,0 +1,390 @@
+"""Multi-node serving fabric: equivalence, conservation, priorities.
+
+The load-bearing invariants of the cluster-of-clusters layer:
+
+  * a 1-node fabric with zero network delay and single-class traffic is
+    *exactly* the bare event engine (the fabric is a superset, not a fork);
+  * no request ever vanishes, across shedding, re-routing, preemption,
+    and node failure;
+  * the priority machinery never inverts: a more important class never
+    does worse than a less important one, and preemption strictly helps
+    the preempting class.
+"""
+import copy
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ElasticPartitioning, calibrate_profiles
+from repro.core.gpulet import Assignment, GpuLet, GpuState
+from repro.core.latency import AnalyticGPULatency
+from repro.core.scenarios import (FabricScenario, fabric_node_sweep,
+                                  failure_drain_scenario, hotspot_scenario,
+                                  skewed_node_popularity)
+from repro.core.scheduler_base import ScheduleResult
+from repro.fabric import (FabricConfig, NetworkModel, ServingFabric,
+                          assign_priorities, build_fabric, build_trace)
+from repro.simulator import EngineConfig, EventHeapEngine, PoissonArrivals
+from repro.simulator.events import Request, merge_sorted
+
+PROFS = calibrate_profiles()
+
+
+def _trace(rates, horizon_ms, seed):
+    gen = PoissonArrivals(seed=seed)
+    return merge_sorted([
+        gen.constant(m, r, PROFS[m].slo_ms, horizon_ms)
+        for m, r in rates.items()])
+
+
+def _fingerprint(reqs):
+    return sorted((r.model, round(r.arrival_ms, 9),
+                   None if r.completion_ms is None
+                   else round(r.completion_ms, 9), r.dropped)
+                  for r in reqs)
+
+
+def _conserved(reqs):
+    return all((r.completion_ms is not None) != r.dropped for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# 1-node / zero-delay equivalence (ISSUE acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       goo=st.sampled_from([0.0, 40.0, 120.0, 400.0]),
+       res=st.sampled_from([30.0, 90.0, 300.0]),
+       le=st.sampled_from([0.0, 100.0]),
+       preemption=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_single_node_fabric_is_the_bare_engine(seed, goo, res, le,
+                                               preemption):
+    """1 node + zero delay + one class == EventHeapEngine, per request.
+
+    Includes overloaded rate points: shedding/re-routing must never touch
+    single-class (all-gold) traffic, so even drops must line up exactly.
+    Holds with preemption enabled too — one class means nothing to
+    preempt.
+    """
+    rates = {m: r for m, r in (("goo", goo), ("res", res), ("le", le))
+             if r > 0}
+    horizon_ms = 8_000.0
+    schedule = ElasticPartitioning(PROFS).schedule(rates)
+    reqs_a = _trace(rates, horizon_ms, seed)
+    reqs_b = copy.deepcopy(reqs_a)
+
+    eng = EventHeapEngine(
+        PROFS, EngineConfig(horizon_ms=horizon_ms,
+                            preemption=preemption),
+        schedule=copy.deepcopy(schedule))
+    eng.submit(reqs_a)
+    m_eng = eng.run()
+
+    fabric = ServingFabric.build(
+        PROFS, 1, rates,
+        FabricConfig(horizon_ms=horizon_ms, preemption=preemption))
+    # identical provisioning: same scheduler output on both sides
+    fabric.nodes[0].schedule = copy.deepcopy(schedule)
+    fabric.nodes[0].rate_by_model = schedule.assignments_by_model()
+    fm = fabric.serve(reqs_b)
+
+    assert fm.fleet.total == m_eng.total
+    assert fm.fleet.completed == m_eng.completed
+    assert fm.fleet.dropped == m_eng.dropped
+    assert fm.fleet.slo_violations == m_eng.slo_violations
+    assert _fingerprint(reqs_a) == _fingerprint(reqs_b)
+    assert fm.shed_total() == 0 and not fm.stats.rerouted
+
+
+# ---------------------------------------------------------------------------
+# conservation across every fabric mechanism
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       policy=st.sampled_from(["least-loaded", "slo-headroom",
+                               "model-affinity"]),
+       n_nodes=st.sampled_from([2, 3]))
+@settings(max_examples=6, deadline=None)
+def test_request_conservation_multi_node(seed, policy, n_nodes):
+    """Every request completes XOR drops — shed, re-route, preempt, net."""
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    cfg = FabricConfig(horizon_ms=12_000.0, policy=policy, preemption=True,
+                       network=NetworkModel(base_ms=0.2, jitter_ms=0.1,
+                                            seed=seed))
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace(scn, PROFS, 12.0, seed=seed)
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.fleet.total == len(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    # router accounting is consistent: every dispatch reached some node
+    assert sum(fm.stats.dispatched.values()) >= \
+        fm.fleet.total - fm.shed_total()
+
+
+def test_request_conservation_failure_drain():
+    """A node dying mid-horizon loses no requests to accounting.
+
+    failover_ms is set well under the SLOs so the replay path actually
+    exercises: with the default 1 s detection lag every caught request's
+    (sub-150 ms) SLO budget is already burned and they all drop as
+    hopeless — also correct, but then nothing reaches the survivors.
+    """
+    scn = failure_drain_scenario(3, fail_at_s=5.0)
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=15_000.0, preemption=True,
+                                 failover_ms=10.0))
+    trace = build_trace(scn, PROFS, 15.0, seed=7)
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    # the failed node really did stop: every request it ever saw either
+    # completed before the death, or was re-armed as a casualty (arrival
+    # pushed past the failure by the detection lag) and finished its life
+    # on a survivor, or ended dropped.
+    fail_ms = scn.fail_at_s[0][1] * 1e3
+    dead = fabric.nodes[scn.fail_at_s[0][0]]
+    assert dead.retired
+    for r in dead.engine.requests:
+        assert r.dropped or (
+            r.completion_ms is not None
+            and (r.completion_ms < fail_ms or r.arrival_ms >= fail_ms))
+    # survivors absorbed at least some of the drained traffic
+    assert fm.stats.failed_over > 0
+
+
+def test_failure_past_horizon_is_healthy():
+    """A failure scheduled after the horizon never happens: the node runs
+    exactly like a healthy peer — no clock cap, no casualties."""
+    scn = failure_drain_scenario(2, fail_at_s=30.0)
+    fabric = build_fabric(scn, PROFS, FabricConfig(horizon_ms=10_000.0))
+    trace = build_trace(scn, PROFS, 10.0, seed=3)
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.stats.failed_over == 0
+    assert not fabric.nodes[0].retired
+    assert all(n.metrics is not None for n in fabric.nodes)
+
+
+def test_fleet_down_losses_are_not_shed():
+    """When no live node exists, losses (including gold) are accounted as
+    ``lost``, never as deliberate ``shed`` — gold is never shed."""
+    scn = failure_drain_scenario(1, fail_at_s=4.0)
+    fabric = build_fabric(scn, PROFS, FabricConfig(horizon_ms=10_000.0))
+    trace = build_trace(scn, PROFS, 10.0, seed=5)
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.stats.lost.get(0, 0) > 0, "post-failure gold arrivals lost"
+    assert 0 not in fm.stats.shed
+
+
+# ---------------------------------------------------------------------------
+# priority semantics
+# ---------------------------------------------------------------------------
+
+def test_no_priority_inversion_under_overload():
+    """Under fleet overload, violation rates are monotone in class level:
+    gold <= silver <= bronze.  The router sheds bronze first and the node
+    engines serve queues in priority order, so any inversion is a bug."""
+    scn = hotspot_scenario(2, mult=4.0, t0_s=3.0, t1_s=9.0,
+                           hot_models=("res", "goo"))
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=12_000.0, preemption=True))
+    trace = build_trace(scn, PROFS, 12.0, seed=11)
+    fm = fabric.serve(trace)
+    pc = fm.fleet.per_class
+    assert set(pc) == {0, 1, 2}
+    rates = [pc[k]["violations"] / pc[k]["total"] for k in (0, 1, 2)]
+    assert rates[0] <= rates[1] + 1e-9
+    assert rates[1] <= rates[2] + 1e-9
+    # the overload actually hurt someone, otherwise this test is vacuous
+    assert rates[2] > 0.0
+    # and bronze was the class that got shed
+    assert set(fm.stats.shed) <= {1, 2}
+
+
+def _shared_gpulet_schedule():
+    """goo (44 ms SLO) and vgg (130 ms) temporally sharing one 100% let."""
+    lat = AnalyticGPULatency()
+    entries = [(PROFS["goo"], 60.0), (PROFS["vgg"], 20.0)]
+    adm = lat.admit(entries, 1.0)
+    assert adm.ok
+    let = GpuLet(gpu_id=0, size=100, assignments=[
+        Assignment("goo", 60.0, adm.batches[0], adm.duty_ms,
+                   adm.est_latency_ms[0]),
+        Assignment("vgg", 20.0, adm.batches[1], adm.duty_ms,
+                   adm.est_latency_ms[1])])
+    return ScheduleResult(gpus=[GpuState(0, [let])], schedulable=True)
+
+
+def _burst_trace():
+    """Repeated bronze vgg bursts; gold goo lands mid-batch."""
+    reqs = [Request("vgg", 40.0 * k, PROFS["vgg"].slo_ms, priority=2)
+            for k in range(3) for _ in range(32)]
+    reqs += [Request("goo", 12.0 + i * 40.0, PROFS["goo"].slo_ms,
+                     priority=0) for i in range(3)]
+    return reqs
+
+
+def test_preemption_saves_gold_and_conserves():
+    """Preempting a long bronze batch strictly improves gold SLOs; the
+    preempted requests re-queue (not vanish) and busy time stays sane."""
+    results = {}
+    for preempt in (True, False):
+        reqs = _burst_trace()
+        eng = EventHeapEngine(
+            PROFS, EngineConfig(horizon_ms=5_000.0, preemption=preempt),
+            schedule=_shared_gpulet_schedule())
+        eng.submit(reqs)
+        met = eng.run()
+        results[preempt] = (eng, reqs, met)
+    eng_p, reqs_p, met_p = results[True]
+    eng_n, reqs_n, met_n = results[False]
+    assert eng_p.preemptions >= 1
+    assert eng_n.preemptions == 0
+    gold_p = sum(1 for r in reqs_p if r.priority == 0 and r.violated)
+    gold_n = sum(1 for r in reqs_n if r.priority == 0 and r.violated)
+    assert gold_p < gold_n, "preemption must strictly help gold here"
+    assert _conserved(reqs_p) and _conserved(reqs_n)
+    # preempted requests are flagged and counted per class
+    assert met_p.preempted > 0
+    assert met_p.per_class[2]["preempted"] == met_p.preempted
+    assert met_p.per_class[0]["preempted"] == 0
+    # busy time never goes negative (preemption refunds the unrun tail)
+    assert all(v >= -1e-9 for v in met_p.busy_ms_per_gpulet.values())
+    # the walk resumes at the preemptor's model: the batch launched right
+    # after a preemption must serve it, not relaunch the torn-down batch
+    log = eng_p.log
+    for i, e in enumerate(log):
+        if e[0] == "preempt":
+            nxt = next(x for x in log[i + 1:]
+                       if x[0] == "batch" and x[2] == e[2])
+            assert nxt[5] == "goo", "preemptor must launch first"
+
+
+def test_preemption_never_fires_when_waiting_is_safe():
+    """The preemption predicate is cost-aware: if the in-flight batch
+    finishes within the arrival's slack, it is left alone."""
+    reqs = [Request("vgg", 0.0 + 0.01 * i, PROFS["vgg"].slo_ms, priority=2)
+            for i in range(40)]
+    reqs.append(Request("vgg", 30.0, PROFS["vgg"].slo_ms, priority=0))
+    schedule = ElasticPartitioning(PROFS).schedule({"vgg": 30.0})
+    eng = EventHeapEngine(
+        PROFS, EngineConfig(horizon_ms=5_000.0, preemption=True),
+        schedule=schedule)
+    eng.submit(reqs)
+    eng.run()
+    assert eng.preemptions == 0
+    gold = [r for r in reqs if r.priority == 0][0]
+    assert not gold.violated
+
+
+def test_priority_queue_order_within_node():
+    """Queues serve strictly by class: a gold request routed behind queued
+    bronze still launches first."""
+    schedule = _shared_gpulet_schedule()
+    reqs = [Request("goo", 0.0, PROFS["goo"].slo_ms, priority=2)
+            for _ in range(12)]
+    reqs.append(Request("goo", 1.0, PROFS["goo"].slo_ms, priority=0))
+    eng = EventHeapEngine(
+        PROFS, EngineConfig(horizon_ms=4_000.0, preemption=True),
+        schedule=schedule)
+    eng.submit(reqs)
+    eng.run()
+    gold = reqs[-1]
+    bronze_done = [r.completion_ms for r in reqs[:-1]
+                   if r.completion_ms is not None]
+    assert gold.completion_ms is not None
+    # the gold request completes no later than the slowest bronze one
+    # that shared its node (it may share the very first batch).
+    assert gold.completion_ms <= max(bronze_done) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# router / scenario plumbing
+# ---------------------------------------------------------------------------
+
+def test_router_determinism():
+    """Same seed -> byte-identical fabric outcome, any policy."""
+    for policy in ("least-loaded", "slo-headroom", "model-affinity"):
+        prints = []
+        for _ in range(2):
+            scn = hotspot_scenario(3, mult=2.0)
+            fabric = build_fabric(scn, PROFS, FabricConfig(
+                horizon_ms=10_000.0, policy=policy, preemption=True,
+                network=NetworkModel(base_ms=0.1, jitter_ms=0.05, seed=3)))
+            trace = build_trace(scn, PROFS, 10.0, seed=5)
+            fm = fabric.serve(trace)
+            prints.append((_fingerprint(trace), fm.stats.shed,
+                           fm.stats.rerouted, fm.preemptions))
+        assert prints[0] == prints[1], policy
+
+
+def test_affinity_policy_is_sticky_per_model():
+    """With headroom, model-affinity pins each model to exactly one node
+    (weighted rendezvous hashing), so three models cannot cover four
+    nodes — dispatch is deliberately non-uniform."""
+    n = 4
+    weights = skewed_node_popularity(n, skew=2.0)
+    assert abs(sum(weights) - 1.0) < 1e-9
+    assert weights[0] > weights[-1]
+    scn = FabricScenario(
+        name="skew", n_nodes=n,
+        rates={"goo": 100.0, "res": 80.0, "vgg": 40.0},
+        node_weights=weights)
+    # huge backlog threshold: no spill, pure stickiness
+    fabric = build_fabric(scn, PROFS, FabricConfig(
+        horizon_ms=8_000.0, policy="model-affinity",
+        shed_backlog_ms=1e12))
+    trace = build_trace(scn, PROFS, 8.0, seed=9)
+    fm = fabric.serve(trace)
+    homes = {}
+    for node in fabric.nodes:
+        for r in node.engine.requests:
+            homes.setdefault(r.model, set()).add(node.node_id)
+    assert homes and all(len(nodes) == 1 for nodes in homes.values())
+    assert len([n_ for n_ in fm.stats.dispatched if
+                fm.stats.dispatched[n_] > 0]) <= 3
+    assert _conserved(trace)
+
+
+def test_network_delay_shrinks_node_budget():
+    """With RPC delay, node-side SLO budget shrinks by the round trip and
+    arrival shifts by the forward hop — verdicts stay client-consistent."""
+    rates = {"goo": 60.0}
+    scn = FabricScenario(name="net", n_nodes=1, rates=rates)
+    fabric = build_fabric(scn, PROFS, FabricConfig(
+        horizon_ms=6_000.0, network=NetworkModel(base_ms=2.0)))
+    trace = build_trace(scn, PROFS, 6.0, seed=13)
+    client_arrivals = [r.arrival_ms for r in trace]
+    fm = fabric.serve(trace)
+    assert fm.fleet.total == len(trace)
+    for r, a0 in zip(trace, client_arrivals):
+        if not r.dropped:
+            assert math.isclose(r.arrival_ms - a0, 2.0)
+            assert math.isclose(r.slo_ms, PROFS["goo"].slo_ms - 4.0)
+
+
+def test_per_node_controllers_tick():
+    """period_s wires a ServingController per node; ticks actually fire."""
+    scn = fabric_node_sweep(node_counts=(2,))[0]
+    fabric = build_fabric(scn, PROFS, FabricConfig(
+        horizon_ms=12_000.0, period_s=4.0, reorg_s=0.5))
+    trace = build_trace(scn, PROFS, 12.0, seed=17)
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    for node in fabric.nodes:
+        assert node.engine.ticks, "per-node reschedule ticks must fire"
+    assert fm.fleet.total == len(trace)
+
+
+def test_assign_priorities_mix_and_determinism():
+    reqs = [Request("goo", float(i), 44.0) for i in range(4000)]
+    assign_priorities(reqs, {0: 0.2, 1: 0.5, 2: 0.3}, seed=3)
+    counts = {k: sum(1 for r in reqs if r.priority == k) for k in (0, 1, 2)}
+    assert abs(counts[0] / 4000 - 0.2) < 0.05
+    assert abs(counts[1] / 4000 - 0.5) < 0.05
+    reqs2 = [Request("goo", float(i), 44.0) for i in range(4000)]
+    assign_priorities(reqs2, {0: 0.2, 1: 0.5, 2: 0.3}, seed=3)
+    assert [r.priority for r in reqs] == [r.priority for r in reqs2]
