@@ -1,0 +1,169 @@
+"""Engine scale sweep: requests/sec simulated at 1 / 8 / 64 nodes.
+
+The perf-trajectory artifact for the serving hot path (ISSUE 4): a weak-
+scaling ladder over the fabric — each node provisioned for ~500 req/s of
+the mixed paper workload, 160 s horizon, so the top rung is a 64-node
+fleet serving ≈5.1M requests in one simulated run.  Emits machine-
+readable ``BENCH_engine.json`` at the repo root with, per rung:
+
+  * ``requests`` / ``wall_s`` / ``req_per_s_simulated``
+  * ``peak_rss_mb`` — process high-water RSS after the rung (self +
+    forked node workers); cumulative by nature of ``ru_maxrss``
+  * conservation + SLO summary, so a perf win that corrupts results is
+    visible in the same file
+
+CLI::
+
+    python -m benchmarks.bench_engine            # full ladder + JSON
+    python -m benchmarks.bench_engine --smoke    # CI timing budget:
+        100k requests through the fabric single-node path must finish
+        under --budget-s wall seconds (exit 1 otherwise)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import resource
+import time
+
+from benchmarks.common import Row, setup
+from repro.core.scenarios import (ENGINE_BENCH_HORIZON_S,
+                                  ENGINE_BENCH_NODE_COUNTS,
+                                  SWEEP_NODE_RATES, fabric_node_sweep)
+from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
+                          build_trace_soa)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_engine.json")
+
+#: PR-3's fig_fabric_scaling 16-node wall (520k requests, object-based
+#: hot path) as recorded in BENCH_fabric.json at the PR-3 tip.  A
+#: same-session interleaved re-measure of that commit on this machine
+#: gave 21.4-28.5 s (the box's CPU quota fluctuates ~1.5x), so the
+#: committed number is representative.  The SoA speedup below is
+#: computed against it.
+PR3_FABRIC_16N_WALL_S = 24.63
+
+
+def _peak_rss_mb() -> float:
+    """High-water RSS of this process and its (forked) children, MB."""
+    self_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    child_kb = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss
+    return max(self_kb, child_kb) / 1024.0
+
+
+def run_point(n_nodes: int, horizon_s: float, seed: int = 0,
+              node_workers: int | None = None) -> dict:
+    """One weak-scaling rung: build, trace, serve; everything timed."""
+    profs, _intf, _ = setup()
+    if node_workers is None:
+        node_workers = os.cpu_count() or 1
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    cfg = FabricConfig(horizon_ms=horizon_s * 1e3, policy="least-loaded",
+                       network=NetworkModel(base_ms=0.15, seed=seed),
+                       preemption=True, node_workers=node_workers)
+    t0 = time.perf_counter()
+    fabric = build_fabric(scn, profs, cfg)
+    for node in fabric.nodes:
+        # multi-million-request rungs must not accumulate an event log
+        node.cfg = dataclasses.replace(node.cfg, event_log=False)
+    trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    fm = fabric.serve_trace(trace)
+    wall = time.perf_counter() - t0
+    total = fm.fleet.total
+    return {
+        "n_nodes": n_nodes,
+        "horizon_s": horizon_s,
+        "requests": total,
+        "wall_s": wall,
+        "req_per_s_simulated": total / wall if wall else 0.0,
+        "peak_rss_mb": _peak_rss_mb(),
+        "completed": fm.fleet.completed,
+        "dropped": fm.fleet.dropped,
+        "conserved": fm.fleet.completed + fm.fleet.dropped == total,
+        "violation_rate": fm.violation_rate,
+        "goodput_per_node_req_s": fm.goodput_req_s / n_nodes,
+        "preemptions": fm.preemptions,
+        "node_workers": node_workers,
+    }
+
+
+def run_sweep(node_counts=ENGINE_BENCH_NODE_COUNTS,
+              horizon_s: float = ENGINE_BENCH_HORIZON_S,
+              seed: int = 0) -> list[dict]:
+    return [run_point(n, horizon_s, seed=seed) for n in node_counts]
+
+
+def run(fast: bool = False) -> list[Row]:
+    if fast:
+        sweep = [run_point(n, 20.0) for n in (1, 2)]
+    else:
+        sweep = run_sweep()
+        # the fig_fabric_scaling acceptance point: 16 nodes x 65 s
+        # (520k requests), compared against the PR-3 object-path wall.
+        # Best-of-2: shared-CPU containers fluctuate ~2x run to run, and
+        # the minimum is the standard low-noise wall-clock estimator.
+        fig16 = min((run_point(16, 65.0) for _ in range(2)),
+                    key=lambda s: s["wall_s"])
+        payload = {
+            "benchmark": "engine_scale",
+            "per_node_rates": SWEEP_NODE_RATES,
+            "policy": "least-loaded",
+            "preemption": True,
+            "sweep": sweep,
+            "fig_fabric_scaling_16n": {
+                **fig16,
+                "pr3_baseline_wall_s": PR3_FABRIC_16N_WALL_S,
+                "speedup_vs_pr3": PR3_FABRIC_16N_WALL_S / fig16["wall_s"],
+            },
+        }
+        with open(OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        sweep = sweep + [fig16]
+    rows = []
+    for s in sweep:
+        rows.append(Row(
+            f"engine/scale_{s['n_nodes']}n", s["wall_s"] * 1e6,
+            f"requests={s['requests']} "
+            f"sim={s['req_per_s_simulated']:,.0f}req/s "
+            f"rss={s['peak_rss_mb']:.0f}MB "
+            f"viol={100 * s['violation_rate']:.2f}% "
+            f"conserved={s['conserved']}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI timing budget: 100k requests, 1 node")
+    ap.add_argument("--budget-s", type=float, default=20.0,
+                    help="wall-clock budget for --smoke")
+    args = ap.parse_args()
+    if not args.smoke:
+        for row in run():
+            print(row.csv())
+        return 0
+    # --smoke: 100k requests through the fabric single-node path.  The
+    # budget has ~10x headroom over the SoA hot path on a busy CI runner,
+    # so only a hot-path regression (or a return to per-object serving,
+    # which is several times over) trips it.
+    per_node_rate = sum(SWEEP_NODE_RATES.values())
+    horizon_s = 100_000 / per_node_rate
+    s = run_point(1, horizon_s, node_workers=1)
+    ok = s["wall_s"] <= args.budget_s and s["conserved"]
+    print(f"engine-smoke requests={s['requests']} wall={s['wall_s']:.2f}s "
+          f"budget={args.budget_s:.0f}s conserved={s['conserved']} "
+          f"viol={100 * s['violation_rate']:.2f}% "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print("SMOKE FAIL: serving hot path over wall-clock budget "
+              "(or conservation broken)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

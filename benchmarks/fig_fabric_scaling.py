@@ -16,13 +16,15 @@ CLI: ``python -m benchmarks.fig_fabric_scaling --tiny`` runs the 2-node,
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
 
 from benchmarks.common import Row, setup
 from repro.core.scenarios import fabric_node_sweep
-from repro.fabric import FabricConfig, NetworkModel, build_fabric, build_trace
+from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
+                          build_trace_soa)
 from repro.fabric.priority import CLASS_NAMES
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -39,14 +41,20 @@ def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
     out = []
     for scn in fabric_node_sweep(per_node_rates=per_node_rates,
                                  node_counts=node_counts):
+        # the SoA hot path end to end: trace generated straight into
+        # arrays, index-slice dispatch, engines across forked workers,
+        # no per-event log
         cfg = FabricConfig(horizon_ms=horizon_s * 1e3,
                            policy="least-loaded",
                            network=NetworkModel(base_ms=0.15, seed=seed),
-                           preemption=True)
+                           preemption=True,
+                           node_workers=os.cpu_count() or 1)
         t0 = time.perf_counter()
         fabric = build_fabric(scn, profs, cfg)
-        trace = build_trace(scn, profs, horizon_s, seed=seed)
-        fm = fabric.serve(trace)
+        for node in fabric.nodes:
+            node.cfg = dataclasses.replace(node.cfg, event_log=False)
+        trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+        fm = fabric.serve_trace(trace)
         wall_s = time.perf_counter() - t0
         per_class = {}
         for level, pc in sorted(fm.fleet.per_class.items()):
@@ -59,7 +67,7 @@ def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
             }
         out.append({
             "n_nodes": scn.n_nodes,
-            "requests": fm.fleet.total,
+            "requests": len(trace),
             "completed": fm.fleet.completed,
             "dropped": fm.fleet.dropped,
             "goodput_req_s": fm.goodput_req_s,

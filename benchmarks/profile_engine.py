@@ -1,0 +1,78 @@
+"""Hot-path profiler: where does a 100k-request serving run spend time?
+
+First-class tooling for perf PRs (ISSUE 4 satellite): runs a seeded
+100k-request trace through the fabric single-node path under cProfile and
+prints the top-N functions, so a regression (or the next optimisation
+target) is one command away:
+
+    PYTHONPATH=src python -m benchmarks.profile_engine
+    PYTHONPATH=src python -m benchmarks.profile_engine --requests 500000 \\
+        --nodes 4 --sort tottime --top 30
+
+The default configuration mirrors ``benchmarks.fig_fabric_scaling``'s
+per-node workload (~500 req/s of the mixed paper models, 20% gold / 50%
+silver / 30% bronze, preemption on) so profiles line up with the tracked
+benchmark numbers.  The event log is disabled, like the benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import dataclasses
+import io
+import pstats
+import time
+
+from benchmarks.common import setup
+from repro.core.scenarios import SWEEP_NODE_RATES, fabric_node_sweep
+from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
+                          build_trace_soa)
+
+
+def profile_run(n_requests: int = 100_000, n_nodes: int = 1,
+                sort: str = "cumulative", top: int = 20,
+                seed: int = 0) -> pstats.Stats:
+    profs, _intf, _ = setup()
+    per_node_rate = sum(SWEEP_NODE_RATES.values())
+    horizon_s = n_requests / (per_node_rate * n_nodes)
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    cfg = FabricConfig(horizon_ms=horizon_s * 1e3, policy="least-loaded",
+                       network=NetworkModel(base_ms=0.15, seed=seed),
+                       preemption=True)
+    fabric = build_fabric(scn, profs, cfg)
+    for node in fabric.nodes:
+        node.cfg = dataclasses.replace(node.cfg, event_log=False)
+    trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    pr = cProfile.Profile()
+    t0 = time.perf_counter()
+    pr.enable()
+    fm = fabric.serve_trace(trace)
+    pr.disable()
+    wall = time.perf_counter() - t0
+    out = io.StringIO()
+    stats = pstats.Stats(pr, stream=out)
+    stats.sort_stats(sort).print_stats(top)
+    print(f"# {len(trace)} requests, {n_nodes} node(s), "
+          f"{wall:.2f}s wall under profiler "
+          f"({len(trace) / wall:,.0f} req/s simulated), "
+          f"completed={fm.fleet.completed} dropped={fm.fleet.dropped}")
+    print(out.getvalue())
+    return stats
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=100_000,
+                    help="approximate fleet-total request count")
+    ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"])
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    profile_run(args.requests, args.nodes, args.sort, args.top, args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -88,6 +88,13 @@ DEFAULT_PRIORITY_MIX: tuple[tuple[int, float], ...] = \
 SWEEP_NODE_RATES: dict[str, float] = {
     "le": 200.0, "goo": 120.0, "res": 80.0, "ssd": 60.0, "vgg": 40.0}
 
+#: the engine-scale benchmark ladder (benchmarks/bench_engine.py →
+#: BENCH_engine.json): weak scaling at ~500 req/s per node over a 160 s
+#: horizon, so the 64-node rung is a ≈5.1M-request fleet trace — the
+#: struct-of-arrays hot path makes that a sub-minute simulation.
+ENGINE_BENCH_NODE_COUNTS: tuple[int, ...] = (1, 8, 64)
+ENGINE_BENCH_HORIZON_S: float = 160.0
+
 
 @dataclasses.dataclass(frozen=True)
 class FabricScenario:

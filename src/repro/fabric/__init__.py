@@ -9,13 +9,15 @@ from repro.fabric.fabric import FabricConfig, FabricMetrics, ServingFabric
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.priority import (BRONZE, GOLD, PRIORITY_CLASSES, SILVER,
-                                   PriorityClass, assign_priorities)
+                                   PriorityClass, assign_priorities,
+                                   draw_priorities)
 from repro.fabric.router import POLICIES, DispatchStats, FabricRouter
-from repro.fabric.workload import build_fabric, build_trace
+from repro.fabric.workload import build_fabric, build_trace, build_trace_soa
 
 __all__ = [
     "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
     "FabricNode", "FabricRouter", "GOLD", "NetworkModel", "NodeSpec",
     "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
     "ServingFabric", "assign_priorities", "build_fabric", "build_trace",
+    "build_trace_soa", "draw_priorities",
 ]

@@ -16,7 +16,11 @@ the fabric is a strict superset, not a fork, of the single-server path.
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+import os
 from collections.abc import Mapping, Sequence
+
+import numpy as np
 
 from repro.core.elastic import ElasticPartitioning
 from repro.core.hardware import ClusterSpec, PAPER_CLUSTER
@@ -27,7 +31,8 @@ from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.router import DispatchStats, FabricRouter
 from repro.simulator.engine import EngineConfig
 from repro.simulator.events import Request
-from repro.simulator.metrics import SimMetrics, collect
+from repro.simulator.metrics import SimMetrics, collect_trace
+from repro.simulator.trace import DROPPED, RequestTrace
 
 
 @dataclasses.dataclass
@@ -53,11 +58,27 @@ class FabricConfig:
     #: pluggable L(b, p) for the node engines (tpu-let path); None = GPU
     lat: LatencyProvider | None = None
     interference: bool = True
+    #: run healthy nodes' engines across this many forked worker
+    #: processes (nodes are independent once dispatched, so results are
+    #: identical to the sequential order).  1 = in-process (default;
+    #: keeps ``node.engine`` inspectable).  Needs ``os.fork``; silently
+    #: falls back to sequential where unavailable.
+    node_workers: int = 1
 
 
 @dataclasses.dataclass
 class FabricMetrics:
-    """Fleet-wide client-perspective metrics + per-node breakdown."""
+    """Fleet-wide client-perspective metrics + per-node breakdown.
+
+    ``fleet`` is authoritative.  ``per_node`` entries are each node's
+    *local* view, snapshotted when its engine finished — for a node that
+    died mid-horizon this includes batches whose completion the engine
+    stamped at/after the cut, even though the fabric then resets those
+    requests as casualties and replays them on survivors (where they are
+    counted again).  Summing ``per_node`` completions therefore
+    over-counts under failure-drain; it is a per-node diagnostic, not a
+    partition of the fleet totals.
+    """
 
     fleet: SimMetrics
     per_node: dict[int, SimMetrics]
@@ -84,6 +105,7 @@ class ServingFabric:
         self.profiles = dict(profiles)
         self.cfg = cfg or FabricConfig()
         self.nodes = list(nodes)
+        self._served = False
         self.router = FabricRouter(
             self.nodes, policy=self.cfg.policy, network=self.cfg.network,
             shed_backlog_ms=self.cfg.shed_backlog_ms,
@@ -114,12 +136,16 @@ class ServingFabric:
         """
         cfg = cfg or FabricConfig()
         fail_at_ms = dict(fail_at_ms or {})
+        # the default scheduler is deterministic, so identical nodes can
+        # share one solved partitioning; custom factories might not be
+        default_sched = scheduler_factory is None
         if scheduler_factory is None:
             def scheduler_factory(profs, cluster):
                 return ElasticPartitioning(profs, cluster=cluster,
                                            lat=cfg.lat)
         share = {m: r / n_nodes for m, r in rates.items() if r > 0}
         nodes = []
+        static_schedule = None
         for i in range(n_nodes):
             sched = scheduler_factory(profiles, node_cluster)
             on_tick = None
@@ -133,6 +159,13 @@ class ServingFabric:
                 schedule, on_tick = ctrl.make_subscriber(share)
                 period_ms = cfg.period_s * 1e3
                 reorg_ms = cfg.reorg_s * 1e3
+            elif default_sched:
+                # identical nodes get identical static schedules: solve
+                # the partitioning once and share the (read-only) result
+                # — at 64 nodes this is most of the fleet build time
+                if static_schedule is None:
+                    static_schedule = sched.schedule(share)
+                schedule = static_schedule
             else:
                 schedule = sched.schedule(share)
             ecfg = EngineConfig(
@@ -149,9 +182,33 @@ class ServingFabric:
 
     # ---- serving ----------------------------------------------------------
 
-    def serve(self, requests: list[Request]) -> FabricMetrics:
-        """Route and serve one whole-horizon client trace."""
-        self.router.dispatch(requests)
+    def serve(self, requests: "list[Request] | RequestTrace"
+              ) -> FabricMetrics:
+        """Route and serve one whole-horizon client trace.
+
+        Accepts either the SoA :class:`RequestTrace` (the hot path — no
+        per-request objects anywhere) or a list of ``Request`` objects
+        (API-edge adapter: converted in, results written back out).
+        """
+        if isinstance(requests, RequestTrace):
+            return self.serve_trace(requests)
+        trace = RequestTrace.from_requests(requests)
+        fm = self.serve_trace(trace)
+        trace.write_back(requests)
+        return fm
+
+    def serve_trace(self, trace: RequestTrace) -> FabricMetrics:
+        # a fabric run consumes per-node dispatch slices, router load
+        # state, and retirement flags: a second serve on the same
+        # instance would silently mix traces — build a fresh fabric
+        if self._served:
+            raise RuntimeError(
+                "ServingFabric.serve is single-shot; build a new fabric "
+                "for another trace")
+        self._served = True
+        for node in self.nodes:
+            node.trace = trace
+        self.router.dispatch(trace)
         # failing nodes run first (in failure order): their casualties are
         # re-dispatched to nodes that have not executed yet.
         failing = sorted((n for n in self.nodes if n.fails_in_run()),
@@ -160,32 +217,77 @@ class ServingFabric:
             node.run()
             node.retired = True   # router must not target it again
             lost = node.casualties()
-            replay = []
-            for r in lost:
+            if len(lost):
                 # detection lag: the fleet notices the failure, then
-                # replays the request from the router.  The replay time
+                # replays each request from the router.  The replay time
                 # becomes the node-side arrival, and the SLO budget
                 # shrinks by the time already burned waiting on the dead
                 # node — so the survivor's SLO verdict stays
                 # client-consistent (same trick as the network delay).
-                t_replay = max(r.arrival_ms, node.spec.fail_at_ms) \
+                arr = trace.arrival_ms
+                t_replay = np.maximum(arr[lost], node.spec.fail_at_ms) \
                     + self.cfg.failover_ms
-                r.slo_ms -= t_replay - r.arrival_ms
-                r.arrival_ms = t_replay
-                if r.slo_ms <= 0.0:
-                    r.dropped = True   # already hopeless: count the loss
-                else:
-                    replay.append(r)
-            if replay:
-                self.router.dispatch(replay, failover=True)
-        for node in self.nodes:
-            if not node.fails_in_run():
-                node.run()
-        fleet = collect(requests, self.cfg.horizon_ms)
+                new_slo = trace.slo_ms[lost] - (t_replay - arr[lost])
+                trace.slo_ms[lost] = new_slo
+                arr[lost] = t_replay
+                hopeless = new_slo <= 0.0
+                # already hopeless: count the loss
+                trace.status[lost[hopeless]] = DROPPED
+                replay = lost[~hopeless]
+                if len(replay):
+                    self.router.dispatch(trace, replay, failover=True)
+        self._run_healthy(trace)
+        fleet = collect_trace(trace, self.cfg.horizon_ms)
         per_node = {n.node_id: n.metrics for n in self.nodes
                     if n.metrics is not None}
-        preemptions = sum(n.engine.preemptions for n in self.nodes
-                          if n.engine is not None)
+        preemptions = sum(n.engine.preemptions if n.engine is not None
+                          else n.preemptions for n in self.nodes)
         return FabricMetrics(fleet=fleet, per_node=per_node,
                              stats=self.router.stats,
                              preemptions=preemptions)
+
+    def _run_healthy(self, trace: RequestTrace) -> None:
+        """Run every healthy node's engine, optionally in parallel.
+
+        Nodes share no mutable state once the router has filled their
+        index slices, so running them across forked workers is a pure
+        wall-clock win — each child stamps completions into its
+        copy-on-write view and ships back only its own result arrays,
+        which the parent scatters into the shared trace.  Results are
+        bit-identical to the sequential order.
+        """
+        ks = [k for k, n in enumerate(self.nodes) if not n.fails_in_run()]
+        w = min(self.cfg.node_workers, len(ks))
+        if w > 1 and hasattr(os, "fork"):
+            global _PAR_NODES
+            _PAR_NODES = self.nodes
+            try:
+                ctx = multiprocessing.get_context("fork")
+                with ctx.Pool(w) as pool:
+                    for (k, gidx, done, status, preempted, met,
+                         preempts) in pool.map(_run_node_job, ks):
+                        node = self.nodes[k]
+                        trace.completion_ms[gidx] = done
+                        trace.status[gidx] = status
+                        trace.preempted[gidx] |= preempted
+                        node.metrics = met
+                        node.preemptions = preempts
+            finally:
+                _PAR_NODES = None
+            return
+        for k in ks:
+            self.nodes[k].run()
+
+
+#: nodes handed to forked workers (set only around the Pool.map call;
+#: fork children inherit it, so no per-task trace pickling happens)
+_PAR_NODES: list[FabricNode] | None = None
+
+
+def _run_node_job(k: int):
+    """Worker-side: run one node's engine, return its result arrays."""
+    node = _PAR_NODES[k]
+    node.run()
+    eng = node.engine
+    return (k, eng._gidx, eng._done, eng._status, eng._preempted,
+            node.metrics, eng.preemptions)

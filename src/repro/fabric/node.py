@@ -6,8 +6,13 @@ partitioning (:class:`ScheduleResult`), its own
 :class:`~repro.serving.ServingController` wired in as the engine's tick
 subscriber — exactly the PR-1 single-cluster system, replicated per node.
 The router (router.py) never reaches inside a node: it only appends to the
-node's pending trace and reads coarse load signals (provisioned per-model
-rates, gpu-let count).
+node's pending index slice and reads coarse load signals (provisioned
+per-model rates, gpu-let count).
+
+The hand-off is struct-of-arrays end to end: the fabric binds every node
+to the shared :class:`~repro.simulator.trace.RequestTrace`, the router
+fills ``pending_idx`` (global request indices, no objects), and the
+node's engine stamps completions straight back into the shared arrays.
 
 Node failure (the ROADMAP's failure-drain scenario) is modeled by running
 the engine with its clock hard-capped at ``fail_at_ms``: requests completed
@@ -19,11 +24,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.hardware import ClusterSpec, PAPER_CLUSTER
 from repro.core.scheduler_base import ScheduleResult
 from repro.simulator.engine import EngineConfig, EventHeapEngine, TickFn
-from repro.simulator.events import Request
 from repro.simulator.metrics import SimMetrics
+from repro.simulator.trace import COMPLETED, PENDING, UNSERVED, RequestTrace
 
 
 @dataclasses.dataclass
@@ -37,7 +44,7 @@ class NodeSpec:
 
 
 class FabricNode:
-    """Runtime state of one node: pending trace + its engine."""
+    """Runtime state of one node: pending index slice + its engine."""
 
     def __init__(self, spec: NodeSpec, profiles, schedule: ScheduleResult,
                  cfg: EngineConfig, on_tick: TickFn | None = None):
@@ -46,9 +53,15 @@ class FabricNode:
         self.schedule = schedule
         self.cfg = cfg
         self.on_tick = on_tick
-        self.pending: list[Request] = []
+        #: shared fleet trace (bound by ServingFabric before dispatch)
+        self.trace: RequestTrace | None = None
+        #: global indices of requests routed here (the router appends)
+        self.pending_idx: list[int] = []
         self.engine: EventHeapEngine | None = None
         self.metrics: SimMetrics | None = None
+        #: preemption count when the engine ran in a forked worker (the
+        #: parent has no engine object then)
+        self.preemptions = 0
         #: set by the fabric once this node has executed (failed nodes run
         #: first); the router must not dispatch anything more to it.
         self.retired = False
@@ -93,7 +106,7 @@ class FabricNode:
         return self.n_servers * 1e3 / max(self.total_rate, 1e-9)
 
     def run(self) -> SimMetrics:
-        """Run this node's engine over its dispatched trace."""
+        """Run this node's engine over its dispatched index slice."""
         cfg = self.cfg
         if self.fails_in_run():
             # hard-stop the node's clock at the failure instant; the fabric
@@ -103,36 +116,36 @@ class FabricNode:
         self.engine = EventHeapEngine(self.profiles, cfg,
                                       schedule=self.schedule,
                                       on_tick=self.on_tick)
-        self.engine.submit(self.pending)
+        self.engine.submit_trace(
+            self.trace, np.asarray(self.pending_idx, dtype=np.int64))
         self.metrics = self.engine.run()
         return self.metrics
 
-    def casualties(self) -> list[Request]:
+    def casualties(self) -> np.ndarray:
         """Requests lost to this node's failure, reset for re-dispatch.
 
         Only meaningful after :meth:`run` on a node with ``fail_at_ms``.
         A casualty is a request that was *in the node's hands* when it
-        died: still queued at the cut (``unserved`` conservation drops),
+        died: still queued at the cut (``UNSERVED`` conservation drops),
         or in a batch whose completion the engine stamped at/after the
         cut.  Requests the node finished before dying survive as
         completions, and requests it *deliberately* dropped for SLO
         expiry while healthy stay dropped — the client already saw that
         rejection; replaying them would under-count violations.
+
+        Returns the casualties' global indices (arrival order) with their
+        completion/status state reset, ready for a failover dispatch.
         """
         fail = self.spec.fail_at_ms
         if not self.fails_in_run() or self.engine is None:
-            return []
-        lost = []
-        for r in self.engine.requests:
-            if r.dropped and r.unserved:
-                pass                                  # queued at the cut
-            elif r.completion_ms is not None and not r.dropped \
-                    and r.completion_ms >= fail:
-                pass                                  # in flight at the cut
-            else:
-                continue
-            r.completion_ms = None
-            r.dropped = False
-            r.unserved = False
-            lost.append(r)
+            return np.empty(0, dtype=np.int64)
+        own = self.engine._gidx          # arrival-sorted global indices
+        tr = self.trace
+        st = tr.status[own]
+        lost_mask = (st == UNSERVED) | (
+            (st == COMPLETED) & (tr.completion_ms[own] >= fail))
+        lost = own[lost_mask]
+        if len(lost):
+            tr.completion_ms[lost] = np.nan
+            tr.status[lost] = PENDING
         return lost

@@ -43,6 +43,25 @@ PRIORITY_CLASSES: tuple[PriorityClass, ...] = (
 CLASS_NAMES: dict[int, str] = {c.level: c.name for c in PRIORITY_CLASSES}
 
 
+def draw_priorities(n: int, mix: Mapping[int, float],
+                    seed: int = 0) -> np.ndarray | None:
+    """i.i.d. priority levels for ``n`` requests (None if ``mix`` empty).
+
+    One vectorized ``choice`` call — deterministic for a fixed seed and
+    count, and shared by the object and SoA assignment paths so both tag
+    identically.
+    """
+    if not n or not mix:
+        return None
+    levels = sorted(mix)
+    w = np.asarray([float(mix[lv]) for lv in levels], dtype=float)
+    if w.sum() <= 0:
+        raise ValueError("priority mix needs at least one positive weight")
+    rng = np.random.default_rng(seed)
+    draws = rng.choice(len(levels), size=n, p=w / w.sum())
+    return np.asarray(levels, dtype=np.int16)[draws]
+
+
 def assign_priorities(requests: Iterable[Request],
                       mix: Mapping[int, float],
                       seed: int = 0) -> None:
@@ -52,13 +71,8 @@ def assign_priorities(requests: Iterable[Request],
     deterministic for a fixed seed and request order.
     """
     reqs = list(requests)
-    if not reqs or not mix:
+    levels = draw_priorities(len(reqs), mix, seed)
+    if levels is None:
         return
-    levels = sorted(mix)
-    w = np.asarray([float(mix[lv]) for lv in levels], dtype=float)
-    if w.sum() <= 0:
-        raise ValueError("priority mix needs at least one positive weight")
-    rng = np.random.default_rng(seed)
-    draws = rng.choice(len(levels), size=len(reqs), p=w / w.sum())
-    for r, k in zip(reqs, draws):
-        r.priority = levels[int(k)]
+    for r, p in zip(reqs, levels.tolist()):
+        r.priority = p

@@ -30,15 +30,39 @@ re-routed to the least-backlogged node when the policy's choice is over
 the shed threshold; levels >= ``shed_level`` are dropped outright when
 *every* live candidate is over it.  GOLD (level 0) is always dispatched
 to the policy's choice.
+
+Struct-of-arrays dispatch
+-------------------------
+``dispatch`` consumes a :class:`~repro.simulator.trace.RequestTrace` plus
+an index array and hands each node an *index slice* (``node.pending_idx``)
+— no request objects are created or touched.  Network-delay arrival
+shifts, SLO shrinkage, and shed/lost statuses are applied as vectorized
+array updates after the routing pass.
+
+For the common fleet shape — ``least-loaded`` over a homogeneous fleet
+where every node serves every model and no failures are scheduled — the
+O(n_nodes)-per-request scoring loop collapses to an O(log n) *clear-time
+heap*: each node's fluid backlog ``max(0, B - Δt·s)`` is represented by
+the instant ``c`` at which it drains to zero, dispatch updates only the
+chosen node (``c ← max(c, t) + δ/s``), and the argmin-backlog choice pops
+idle nodes (``c <= t``, tie-broken by node id, exactly like the clamped
+zero-backlog tie) from one heap and the least-loaded busy node from
+another.  A 64-node, 5M-request dispatch pass runs in seconds.  Exotic
+shapes (per-model candidate subsets, heterogeneous drains, scheduled
+failures, the other two policies) take the generic loop, which preserves
+the object path's arithmetic op-for-op.
 """
 from __future__ import annotations
 
 import dataclasses
 import zlib
+from heapq import heappop, heappush
+
+import numpy as np
 
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode
-from repro.simulator.events import Request
+from repro.simulator.trace import LOST, SHED, RequestTrace
 
 #: floor for the node-side SLO after subtracting network round-trip
 MIN_NODE_SLO_MS = 1e-3
@@ -123,26 +147,193 @@ class FabricRouter:
         self._loads = [_NodeLoad(n) for n in nodes]
         self.stats = DispatchStats()
 
-    # ---- policy scoring ---------------------------------------------------
+    # ---- dispatch entry ---------------------------------------------------
 
-    def _candidates(self, r: Request, t_ms: float) -> list[_NodeLoad]:
+    def dispatch(self, trace: RequestTrace, ids: np.ndarray | None = None,
+                 failover: bool = False) -> DispatchStats:
+        """Assign each indexed request to a node (SoA hand-off).
+
+        Appends each routed request's *global index* to its node's
+        ``pending_idx``; shifts dispatched arrivals by the forward RPC
+        delay and shrinks node-side SLO budgets by the round trip (so a
+        node-side SLO verdict equals the client-side one); stamps shed /
+        fleet-down-lost requests' status.  All trace mutation is
+        vectorized after the routing pass.
+
+        ``failover=True`` marks a casualty-replay pass, which happens
+        *after* the primary pass has walked the whole horizon — the fluid
+        load view is therefore stale (end-of-horizon backlog, regressed
+        clocks).  Rather than judge replays against state the router
+        could never have had at the replay instant, the view restarts
+        from zero at the first replay time: replays spread by the
+        policy's static signals plus the backlog they themselves build.
+        """
+        if ids is None:
+            ids = np.arange(len(trace), dtype=np.int64)
+        else:
+            ids = np.asarray(ids, dtype=np.int64)
+        if not len(ids):
+            return self.stats
+        order = ids[np.argsort(trace.arrival_ms[ids], kind="stable")]
+        if failover:
+            t0 = float(trace.arrival_ms[order[0]])
+            for ld in self._loads:
+                ld.reset(t0)
+        if self._fast_path_ok(trace):
+            self._dispatch_least_loaded(trace, order, failover)
+        else:
+            self._dispatch_generic(trace, order, failover)
+        return self.stats
+
+    # ---- least-loaded clear-time fast path --------------------------------
+
+    def _fast_path_ok(self, trace: RequestTrace) -> bool:
+        """Homogeneous least-loaded fleets take the O(log n) heap path.
+
+        Preconditions make the fluid model collapse to one clear-time per
+        node: same drain rate everywhere, model-independent per-dispatch
+        occupancy (every node provisions every model), no failures or
+        retirements that would change the candidate set mid-pass.
+        """
+        if self.policy != "least-loaded" or not self._loads:
+            return False
+        if self.shed_level < self.reroute_level:
+            return False            # shed implies re-route eligibility
+        s0 = self._loads[0].node.n_servers
+        for i, ld in enumerate(self._loads):
+            n = ld.node
+            if n.retired or n.spec.fail_at_ms is not None \
+                    or n.n_servers != s0 or n.node_id != i:
+                return False
+            rbm = n.rate_by_model
+            for m in trace.models:
+                if rbm.get(m, 0.0) <= 0.0:
+                    return False
+        return True
+
+    def _dispatch_least_loaded(self, trace: RequestTrace,
+                               order: np.ndarray, failover: bool) -> None:
+        loads = self._loads
+        n_nodes = len(loads)
+        s = loads[0].node.n_servers
+        anchor = trace.models[0]
+        # per-dispatch clear-time increment (occupancy / drain rate);
+        # model-independent under the fast-path preconditions
+        ds = [ld.node.service_ms(anchor) / s for ld in loads]
+        # resume from the current fluid state: the instant each node's
+        # backlog drains to zero
+        c = [ld.last_ms + ld.backlog_ms / s for ld in loads]
+        tag = [0] * n_nodes
+        busy: list[tuple] = [(c[i], i, 0) for i in range(n_nodes)]
+        busy.sort()
+        idle: list[int] = []
+        oid = order.tolist()
+        arr_list = trace.arrival_ms[order].tolist()
+        pri_list: list[int] | None = None   # materialized on first shed
+        pend: list[list[int]] = [[] for _ in range(n_nodes)]
+        shed_ids: list[int] = []
+        shed_by_class: dict[int, int] = {}
+        sent_ids: list[int] = []
+        sent_d: list[float] = []
+        net = self.network
+        net_zero = net.is_zero
+        base_ms, jitter_ms = net.base_ms, net.jitter_ms
+        #: constant-delay fleets skip per-send bookkeeping entirely: the
+        #: arrival/SLO shift applies uniformly to everything dispatched
+        const_delay = not net_zero and jitter_ms <= 0.0
+        shed_thresh = self.shed_backlog_ms
+        shed_level = self.shed_level
+        t = 0.0
+        for k in range(len(oid)):
+            t = arr_list[k]
+            # surface nodes whose backlog has drained: zero backlog ties
+            # break by node id, exactly like the clamped fluid view
+            while busy:
+                cc, nid, tg = busy[0]
+                if tg != tag[nid]:
+                    heappop(busy)           # stale entry (node re-scored)
+                elif cc <= t:
+                    heappop(busy)
+                    heappush(idle, nid)
+                else:
+                    break
+            if idle:
+                nid = heappop(idle)
+                cnew = t + ds[nid]
+            else:
+                cc, nid, _tg = busy[0]      # least-loaded busy node
+                if (cc - t) * s > shed_thresh:
+                    if pri_list is None:
+                        pri_list = trace.priority[order].tolist()
+                    p = pri_list[k]
+                    # least-loaded's re-route target IS the policy choice,
+                    # so over-threshold traffic either sheds (>= shed
+                    # level) or dispatches anyway (gold/silver)
+                    if p >= shed_level:
+                        i = oid[k]
+                        shed_ids.append(i)
+                        shed_by_class[p] = shed_by_class.get(p, 0) + 1
+                        continue
+                cnew = cc + ds[nid]
+            c[nid] = cnew
+            tag[nid] += 1
+            heappush(busy, (cnew, nid, tag[nid]))
+            pend[nid].append(oid[k])
+            if not net_zero and not const_delay:
+                # per-send draw keeps the rng stream identical to the
+                # object path (block pre-draws would over-consume)
+                d = base_ms + float(net._rng.uniform(0.0, jitter_ms))
+                if d > 0.0:
+                    sent_ids.append(oid[k])
+                    sent_d.append(d)
+        # sync the fluid view (a later failover pass resets it anyway)
+        for i, ld in enumerate(loads):
+            ld.last_ms = t
+            ld.backlog_ms = max(0.0, (c[i] - t) * s)
+        stats = self.stats
+        for i, node_pend in enumerate(pend):
+            if node_pend:
+                nid = loads[i].node.node_id
+                stats.dispatched[nid] = \
+                    stats.dispatched.get(nid, 0) + len(node_pend)
+                loads[i].node.pending_idx.extend(node_pend)
+        if failover:
+            stats.failed_over += sum(len(p) for p in pend)
+        for p, cnt in shed_by_class.items():
+            stats.shed[p] = stats.shed.get(p, 0) + cnt
+        if const_delay and base_ms > 0.0:
+            d = base_ms
+            for node_pend in pend:
+                if node_pend:
+                    sid = np.asarray(node_pend, dtype=np.int64)
+                    trace.arrival_ms[sid] += d
+                    trace.slo_ms[sid] = np.maximum(
+                        trace.slo_ms[sid] - 2.0 * d, MIN_NODE_SLO_MS)
+            self._apply_trace_updates(trace, shed_ids, [], [], [])
+        else:
+            self._apply_trace_updates(trace, shed_ids, [], sent_ids,
+                                      sent_d)
+
+    # ---- generic per-request loop (exotic shapes + other policies) --------
+
+    def _candidates(self, model: str, t_ms: float) -> list[_NodeLoad]:
         cands = [ld for ld in self._loads
-                 if ld.node.alive_at(t_ms) and ld.node.serves(r.model)]
+                 if ld.node.alive_at(t_ms) and ld.node.serves(model)]
         if not cands:  # nobody provisioned for the model: any live node
             cands = [ld for ld in self._loads if ld.node.alive_at(t_ms)]
         return cands
 
-    def _choose(self, r: Request, cands: list[_NodeLoad],
+    def _choose(self, model: str, cands: list[_NodeLoad],
                 t_ms: float) -> _NodeLoad:
         if self.policy == "least-loaded":
             return min(cands, key=lambda ld: (ld.backlog_ms,
                                               ld.node.node_id))
         if self.policy == "slo-headroom":
             def headroom(ld: _NodeLoad) -> float:
-                prov = ld.node.rate_by_model.get(r.model, 0.0)
+                prov = ld.node.rate_by_model.get(model, 0.0)
                 if prov <= 0.0:
                     return -1.0
-                return (prov - ld.observed_rate(r.model, t_ms)) / prov
+                return (prov - ld.observed_rate(model, t_ms)) / prov
             return max(cands, key=lambda ld: (headroom(ld), -ld.backlog_ms,
                                               -ld.node.node_id))
         # model-affinity: weighted rendezvous hashing — each model gets a
@@ -153,7 +344,7 @@ class FabricRouter:
         # would break run-to-run determinism.
         def pref(ld: _NodeLoad) -> tuple:
             w = max(self.affinity_weights.get(ld.node.node_id, 1.0), 1e-9)
-            u32 = zlib.crc32(f"{r.model}:{ld.node.node_id}".encode())
+            u32 = zlib.crc32(f"{model}:{ld.node.node_id}".encode())
             h = (u32 + 1.0) / (2**32 + 2.0)     # in (0, 1)
             return (-(h ** (1.0 / w)), ld.node.node_id)
         ordered = sorted(cands, key=pref)
@@ -162,69 +353,76 @@ class FabricRouter:
                 return ld
         return ordered[0]
 
-    # ---- dispatch ---------------------------------------------------------
-
-    def dispatch(self, requests: list[Request],
-                 failover: bool = False) -> DispatchStats:
-        """Assign each request to a node; mutates requests for network lag.
-
-        A dispatched request's ``arrival_ms`` is shifted by the forward
-        RPC delay and its node-side SLO budget shrinks by the round trip,
-        so a node-side SLO verdict equals the client-side one.  Shed
-        requests are marked dropped and never reach a node.
-
-        ``failover=True`` marks a casualty-replay pass, which happens
-        *after* the primary pass has walked the whole horizon — the fluid
-        load view is therefore stale (end-of-horizon backlog, regressed
-        clocks).  Rather than judge replays against state the router
-        could never have had at the replay instant, the view restarts
-        from zero at the first replay time: replays spread by the
-        policy's static signals plus the backlog they themselves build.
-        """
-        reqs = sorted(requests, key=lambda r: r.arrival_ms)
-        if failover and reqs:
-            for ld in self._loads:
-                ld.reset(reqs[0].arrival_ms)
-        for r in reqs:
-            t = r.arrival_ms
+    def _dispatch_generic(self, trace: RequestTrace, order: np.ndarray,
+                          failover: bool) -> None:
+        models = trace.models
+        oid = order.tolist()
+        arr_list = trace.arrival_ms[order].tolist()
+        pri_list = trace.priority[order].tolist()
+        mid_list = trace.model_id[order].tolist()
+        net = self.network
+        track_rates = self.policy == "slo-headroom"
+        stats = self.stats
+        shed_ids: list[int] = []
+        lost_ids: list[int] = []
+        sent_ids: list[int] = []
+        sent_d: list[float] = []
+        for k in range(len(oid)):
+            t = arr_list[k]
+            p = pri_list[k]
+            m = models[mid_list[k]]
             for ld in self._loads:
                 ld.drain_to(t)
-            cands = self._candidates(r, t)
+            cands = self._candidates(m, t)
             if not cands:
                 # no live node at all: the fleet is down, request is lost
-                r.dropped = True
-                self.stats.count(self.stats.lost, r.priority)
+                lost_ids.append(oid[k])
+                stats.count(stats.lost, p)
                 continue
-            ld = self._choose(r, cands, t)
+            ld = self._choose(m, cands, t)
             if ld.backlog_ms > self.shed_backlog_ms \
-                    and r.priority >= self.reroute_level:
+                    and p >= self.reroute_level:
                 alt = min(cands, key=lambda c: (c.backlog_ms,
                                                 c.node.node_id))
                 if alt.backlog_ms > self.shed_backlog_ms:
-                    if r.priority >= self.shed_level:
-                        r.dropped = True
-                        self.stats.count(self.stats.shed, r.priority)
+                    if p >= self.shed_level:
+                        shed_ids.append(oid[k])
+                        stats.count(stats.shed, p)
                         continue
                 elif alt is not ld:
                     ld = alt
-                    self.stats.count(self.stats.rerouted, r.priority)
-            self._send(r, ld, t)
+                    stats.count(stats.rerouted, p)
+            node = ld.node
+            d = net.delay_ms(node.node_id)
+            if d > 0.0:
+                sent_ids.append(oid[k])
+                sent_d.append(d)
+            ld.backlog_ms += node.service_ms(m)
+            if track_rates:
+                ld.note(m, t, self.rate_window_ms)
+            node.pending_idx.append(oid[k])
+            stats.count(stats.dispatched, node.node_id)
             if failover:
-                self.stats.failed_over += 1
-        return self.stats
+                stats.failed_over += 1
+        self._apply_trace_updates(trace, shed_ids, lost_ids, sent_ids,
+                                  sent_d)
 
-    # ---- plumbing ---------------------------------------------------------
+    # ---- vectorized trace mutation ----------------------------------------
 
-    def _send(self, r: Request, ld: _NodeLoad, t_ms: float) -> None:
-        node = ld.node
-        d = self.network.delay_ms(node.node_id)
-        if d > 0.0:
-            r.arrival_ms += d
-            r.slo_ms = max(r.slo_ms - 2.0 * d, MIN_NODE_SLO_MS)
-        ld.backlog_ms += node.service_ms(r.model)
-        ld.note(r.model, t_ms, self.rate_window_ms)
-        node.pending.append(r)
-        self.stats.count(self.stats.dispatched, node.node_id)
+    @staticmethod
+    def _apply_trace_updates(trace: RequestTrace, shed_ids: list[int],
+                             lost_ids: list[int], sent_ids: list[int],
+                             sent_d: list[float]) -> None:
+        if shed_ids:
+            trace.status[np.asarray(shed_ids, dtype=np.int64)] = SHED
+        if lost_ids:
+            trace.status[np.asarray(lost_ids, dtype=np.int64)] = LOST
+        if sent_ids:
+            sid = np.asarray(sent_ids, dtype=np.int64)
+            d = np.asarray(sent_d)
+            trace.arrival_ms[sid] += d
+            trace.slo_ms[sid] = np.maximum(trace.slo_ms[sid] - 2.0 * d,
+                                           MIN_NODE_SLO_MS)
 
 
 POLICIES: tuple[str, ...] = ("least-loaded", "slo-headroom",

@@ -3,6 +3,13 @@
 core/scenarios.py describes multi-node experiments as pure data; this
 module turns one into (a) a whole-horizon, priority-tagged Poisson trace
 and (b) a ready-to-serve :class:`ServingFabric` provisioned for it.
+
+:func:`build_trace_soa` is the hot path: it generates the trace straight
+into :class:`~repro.simulator.trace.RequestTrace` arrays (no ``Request``
+objects), which is how million-request fleet sweeps stay cheap.
+:func:`build_trace` keeps the object-returning API for the edges; the
+two produce the identical trace for a given scenario and seed (same rng
+consumption order, same stable merge).
 """
 from __future__ import annotations
 
@@ -11,14 +18,15 @@ from collections.abc import Mapping
 from repro.core.profiles import ModelProfile
 from repro.core.scenarios import FabricScenario
 from repro.fabric.fabric import FabricConfig, ServingFabric
-from repro.fabric.priority import assign_priorities
-from repro.simulator.events import PoissonArrivals, Request, merge_sorted
+from repro.fabric.priority import draw_priorities
+from repro.simulator.events import PoissonArrivals, Request
+from repro.simulator.trace import RequestTrace
 
 
-def build_trace(scn: FabricScenario,
-                profiles: Mapping[str, ModelProfile],
-                horizon_s: float, seed: int = 0) -> list[Request]:
-    """Fleet-total arrival trace for one scenario, priorities assigned.
+def build_trace_soa(scn: FabricScenario,
+                    profiles: Mapping[str, ModelProfile],
+                    horizon_s: float, seed: int = 0) -> RequestTrace:
+    """Fleet-total SoA arrival trace for one scenario, priorities assigned.
 
     Constant-rate models use the homogeneous generator; hot-spot models go
     through thinning against their burst peak.  Priorities are tagged
@@ -33,14 +41,25 @@ def build_trace(scn: FabricScenario,
         slo = profiles[m].slo_ms
         if scn.hotspot is not None and m in scn.hot_models:
             fn = scn.rate_fn(m)
-            streams.append(gen.time_varying(
-                m, lambda t, fn=fn: fn(t / 1e3), scn.peak_rate(m) + 1e-9,
-                slo, horizon_ms))
+            times = gen.time_varying_times(
+                lambda t, fn=fn: fn(t / 1e3), scn.peak_rate(m) + 1e-9,
+                horizon_ms)
         else:
-            streams.append(gen.constant(m, r, slo, horizon_ms))
-    reqs = merge_sorted(streams)
-    assign_priorities(reqs, dict(scn.priority_mix), seed=seed + 1)
-    return reqs
+            times = gen.constant_times(r, horizon_ms)
+        streams.append((m, times, slo))
+    trace = RequestTrace.from_streams(streams)
+    levels = draw_priorities(len(trace), dict(scn.priority_mix),
+                             seed=seed + 1)
+    if levels is not None:
+        trace.priority[:] = levels
+    return trace
+
+
+def build_trace(scn: FabricScenario,
+                profiles: Mapping[str, ModelProfile],
+                horizon_s: float, seed: int = 0) -> list[Request]:
+    """Object-edge variant of :func:`build_trace_soa` (same trace)."""
+    return build_trace_soa(scn, profiles, horizon_s, seed).to_requests()
 
 
 def build_fabric(scn: FabricScenario,

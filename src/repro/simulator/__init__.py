@@ -2,7 +2,10 @@
 from repro.simulator.cluster import SimConfig, simulate_schedule
 from repro.simulator.engine import EngineConfig, EventHeapEngine
 from repro.simulator.events import PoissonArrivals, Request
-from repro.simulator.metrics import SimMetrics, window_metrics
+from repro.simulator.metrics import (SimMetrics, collect_trace,
+                                     window_metrics)
+from repro.simulator.trace import RequestTrace, RequestView
 
 __all__ = ["EngineConfig", "EventHeapEngine", "PoissonArrivals", "Request",
-           "SimConfig", "SimMetrics", "simulate_schedule", "window_metrics"]
+           "RequestTrace", "RequestView", "SimConfig", "SimMetrics",
+           "collect_trace", "simulate_schedule", "window_metrics"]

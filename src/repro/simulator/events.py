@@ -75,29 +75,40 @@ class PoissonArrivals:
         times = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
         return times[times < horizon_ms]
 
+    def constant_times(self, rate_req_s: float,
+                       horizon_ms: float) -> np.ndarray:
+        """Arrival-time array for a homogeneous stream (SoA hot path)."""
+        if rate_req_s <= 0:
+            return np.empty(0)
+        return self._arrival_times(rate_req_s, horizon_ms)
+
+    def time_varying_times(self, rate_fn: Callable[[float], float],
+                           peak_rate: float,
+                           horizon_ms: float) -> np.ndarray:
+        """Thinned arrival-time array for an inhomogeneous stream."""
+        if peak_rate <= 0:
+            return np.empty(0)
+        times = self._arrival_times(peak_rate, horizon_ms)
+        if times.size == 0:
+            return times
+        u = self.rng.uniform(size=times.size)
+        rates = np.fromiter((rate_fn(float(t)) for t in times),
+                            dtype=float, count=times.size)
+        return times[u < rates / peak_rate]
+
     def constant(self, model: str, rate_req_s: float, slo_ms: float,
                  horizon_ms: float, start_ms: float = 0.0) -> list[Request]:
-        if rate_req_s <= 0:
-            return []
-        times = self._arrival_times(rate_req_s, horizon_ms)
         return [Request(model=model, arrival_ms=start_ms + float(t),
-                        slo_ms=slo_ms) for t in times]
+                        slo_ms=slo_ms)
+                for t in self.constant_times(rate_req_s, horizon_ms)]
 
     def time_varying(self, model: str, rate_fn: Callable[[float], float],
                      peak_rate: float, slo_ms: float,
                      horizon_ms: float) -> list[Request]:
         """Inhomogeneous Poisson via thinning against ``peak_rate``."""
-        if peak_rate <= 0:
-            return []
-        times = self._arrival_times(peak_rate, horizon_ms)
-        if times.size == 0:
-            return []
-        u = self.rng.uniform(size=times.size)
-        rates = np.fromiter((rate_fn(float(t)) for t in times),
-                            dtype=float, count=times.size)
-        keep = times[u < rates / peak_rate]
         return [Request(model=model, arrival_ms=float(t), slo_ms=slo_ms)
-                for t in keep]
+                for t in self.time_varying_times(rate_fn, peak_rate,
+                                                 horizon_ms)]
 
 
 def merge_sorted(streams: Sequence[list[Request]]) -> list[Request]:

@@ -1,7 +1,19 @@
-"""SLO/throughput accounting for simulated serving runs."""
+"""SLO/throughput accounting for simulated serving runs.
+
+Two collection paths produce identical :class:`SimMetrics`:
+
+* :func:`collect` — object edge: a Python loop over ``Request`` (or
+  ``RequestView``) instances.  Fine for tests and small traces.
+* :func:`collect_arrays` / :func:`collect_trace` — the hot path: O(1)
+  vectorized accumulation (masked ``bincount`` reductions) over the
+  struct-of-arrays trace, no per-request Python.  A million-request
+  fleet reduces in milliseconds instead of seconds.
+"""
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 from repro.simulator.events import Request
 
@@ -65,6 +77,81 @@ def window_metrics(requests: list[Request], window_ms: float,
     if horizon_ms is not None:
         spans[-1] = max(horizon_ms - (n_windows - 1) * window_ms, 1e-9)
     return [collect(b, s) for b, s in zip(buckets, spans)]
+
+
+def collect_arrays(models: list[str], model_id: np.ndarray,
+                   arrival_ms: np.ndarray, slo_ms: np.ndarray,
+                   completion_ms: np.ndarray, status: np.ndarray,
+                   priority: np.ndarray, preempted: np.ndarray,
+                   horizon_ms: float,
+                   busy_ms: dict | None = None) -> SimMetrics:
+    """Vectorized :func:`collect` over parallel request arrays.
+
+    Semantics match the object loop exactly: drops (``status >=
+    DROPPED``) count as violations, completions count as violations only
+    when they finish past the SLO, and per-model / per-class tallies
+    cover every request.
+    """
+    from repro.simulator.trace import COMPLETED, FIRST_DROP_STATUS
+    m = SimMetrics(horizon_ms=horizon_ms)
+    m.busy_ms_per_gpulet = busy_ms or {}
+    n = len(status)
+    m.total = n
+    if n == 0:
+        return m
+    done_mask = status == COMPLETED
+    drop_mask = status >= FIRST_DROP_STATUS
+    late_mask = np.zeros(n, dtype=bool)
+    late_mask[done_mask] = (completion_ms[done_mask]
+                            - arrival_ms[done_mask]) > slo_ms[done_mask]
+    viol_mask = drop_mask | late_mask
+    m.completed = int(done_mask.sum())
+    m.dropped = int(drop_mask.sum())
+    m.slo_violations = int(viol_mask.sum())
+    m.preempted = int(preempted.sum())
+
+    def tally(keys: np.ndarray, nk: int, mask: np.ndarray) -> np.ndarray:
+        return np.bincount(keys[mask], minlength=nk)
+
+    nm = len(models)
+    mid = model_id
+    tot_m = np.bincount(mid, minlength=nm)
+    viol_m = tally(mid, nm, viol_mask)
+    drop_m = tally(mid, nm, drop_mask)
+    done_m = tally(mid, nm, done_mask)
+    for k in np.flatnonzero(tot_m).tolist():
+        m.per_model[models[k]] = dict(
+            total=int(tot_m[k]), violations=int(viol_m[k]),
+            dropped=int(drop_m[k]), completed=int(done_m[k]))
+    levels, inv = np.unique(priority, return_inverse=True)
+    nl = len(levels)
+    tot_c = np.bincount(inv, minlength=nl)
+    viol_c = tally(inv, nl, viol_mask)
+    drop_c = tally(inv, nl, drop_mask)
+    done_c = tally(inv, nl, done_mask)
+    pre_c = tally(inv, nl, preempted)
+    for k, lv in enumerate(levels.tolist()):
+        m.per_class[int(lv)] = dict(
+            total=int(tot_c[k]), violations=int(viol_c[k]),
+            dropped=int(drop_c[k]), completed=int(done_c[k]),
+            preempted=int(pre_c[k]))
+    return m
+
+
+def collect_trace(trace, horizon_ms: float, busy_ms: dict | None = None,
+                  idx: np.ndarray | None = None) -> SimMetrics:
+    """:func:`collect_arrays` over a ``RequestTrace`` (or a subset)."""
+    if idx is None:
+        return collect_arrays(trace.models, trace.model_id,
+                              trace.arrival_ms, trace.slo_ms,
+                              trace.completion_ms, trace.status,
+                              trace.priority, trace.preempted,
+                              horizon_ms, busy_ms)
+    return collect_arrays(trace.models, trace.model_id[idx],
+                          trace.arrival_ms[idx], trace.slo_ms[idx],
+                          trace.completion_ms[idx], trace.status[idx],
+                          trace.priority[idx], trace.preempted[idx],
+                          horizon_ms, busy_ms)
 
 
 def collect(requests: list[Request], horizon_ms: float,

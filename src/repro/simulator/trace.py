@@ -1,0 +1,301 @@
+"""Struct-of-arrays request trace: the serving hot path's data layout.
+
+A million-request trace as a list of ``Request`` dataclasses costs ~100
+bytes and a dict lookup per field access per request — at fabric scale the
+simulator spent most of its wall clock chasing object pointers.
+:class:`RequestTrace` stores the same information as parallel numpy arrays
+(``arrival_ms``, ``slo_ms``, ``model_id``, ``priority``, ``completion_ms``,
+``status``, ``preempted``), so the engine and fabric can batch-form,
+batch-drop, and batch-account requests with vectorized mask operations,
+and hand work between layers as index slices instead of object lists.
+
+``Request`` objects remain the API-edge representation: traces convert
+losslessly in both directions (:meth:`from_requests` /
+:meth:`write_back`), and :class:`RequestView` gives zero-copy per-request
+object access into a trace for tests and diagnostics.
+
+Status codes
+------------
+Request lifecycle state is one enum on the ``status`` array — a request
+cannot be simultaneously dropped and completed by construction (the
+scattered ``dropped`` / ``unserved`` per-object bool writes of the object
+path collapse into single array stores):
+
+  * ``PENDING``    — not yet resolved (queued, in flight, undispatched).
+  * ``COMPLETED``  — served; ``completion_ms`` holds the finish time.
+  * ``DROPPED``    — deliberately rejected: SLO already expired at batch
+    formation, or hopeless after a failover replay.
+  * ``UNSERVED``   — conservation drop: still queued when the engine's
+    clock stopped (horizon drain, or a fabric node dying).  The fabric's
+    failure-drain path replays exactly these.
+  * ``SHED``       — router overload valve dropped it before any node.
+  * ``LOST``       — no live node existed at dispatch time (fleet down).
+
+``status >= DROPPED`` is the "dropped" predicate everywhere (and what
+``Request.dropped`` maps back to at the object edge).
+"""
+from __future__ import annotations
+
+from collections.abc import Iterable, Sequence
+
+import numpy as np
+
+from repro.simulator.events import Request
+
+# -- request lifecycle status codes (uint8) ---------------------------------
+PENDING, COMPLETED, DROPPED, UNSERVED, SHED, LOST = 0, 1, 2, 3, 4, 5
+
+#: statuses counted as drops (== SLO violations that never completed)
+FIRST_DROP_STATUS = DROPPED
+
+STATUS_NAMES = {PENDING: "pending", COMPLETED: "completed",
+                DROPPED: "dropped", UNSERVED: "unserved", SHED: "shed",
+                LOST: "lost"}
+
+
+class RequestTrace:
+    """Parallel-array request trace; the one source of truth at runtime.
+
+    All mutable per-request state lives here.  Layers share a trace and
+    pass ``int64`` index arrays: the router hands each node an index
+    slice, node engines stamp completions straight into the shared
+    arrays, and fleet metrics reduce over them once at the end.
+    """
+
+    __slots__ = ("models", "model_index", "arrival_ms", "slo_ms",
+                 "model_id", "priority", "completion_ms", "status",
+                 "preempted")
+
+    def __init__(self, models: Sequence[str], arrival_ms: np.ndarray,
+                 slo_ms: np.ndarray, model_id: np.ndarray,
+                 priority: np.ndarray | None = None,
+                 completion_ms: np.ndarray | None = None,
+                 status: np.ndarray | None = None,
+                 preempted: np.ndarray | None = None):
+        n = len(arrival_ms)
+        self.models = list(models)
+        self.model_index = {m: i for i, m in enumerate(self.models)}
+        self.arrival_ms = np.asarray(arrival_ms, dtype=np.float64)
+        self.slo_ms = np.asarray(slo_ms, dtype=np.float64)
+        self.model_id = np.asarray(model_id, dtype=np.int32)
+        self.priority = (np.zeros(n, dtype=np.int16) if priority is None
+                         else np.asarray(priority, dtype=np.int16))
+        self.completion_ms = (np.full(n, np.nan)
+                              if completion_ms is None
+                              else np.asarray(completion_ms,
+                                              dtype=np.float64))
+        self.status = (np.zeros(n, dtype=np.uint8) if status is None
+                       else np.asarray(status, dtype=np.uint8))
+        self.preempted = (np.zeros(n, dtype=bool) if preempted is None
+                          else np.asarray(preempted, dtype=bool))
+
+    def __len__(self) -> int:
+        return len(self.arrival_ms)
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def from_streams(cls, streams: Iterable[tuple[str, np.ndarray, float]],
+                     start_ms: float = 0.0) -> "RequestTrace":
+        """Merge per-model arrival-time arrays into one sorted trace.
+
+        ``streams`` yields ``(model, arrival_times_ms, slo_ms)``; the
+        result is stably sorted by arrival (ties keep stream order),
+        matching ``events.merge_sorted`` on the equivalent object lists.
+        """
+        models: list[str] = []
+        times: list[np.ndarray] = []
+        slos: list[np.ndarray] = []
+        mids: list[np.ndarray] = []
+        index: dict[str, int] = {}
+        for model, ts, slo in streams:
+            ts = np.asarray(ts, dtype=np.float64)
+            if model not in index:
+                index[model] = len(models)
+                models.append(model)
+            mid = index[model]
+            times.append(ts + start_ms if start_ms else ts)
+            slos.append(np.full(ts.size, float(slo)))
+            mids.append(np.full(ts.size, mid, dtype=np.int32))
+        if not times:
+            return cls([], np.empty(0), np.empty(0),
+                       np.empty(0, dtype=np.int32))
+        arrival = np.concatenate(times)
+        order = np.argsort(arrival, kind="stable")
+        return cls(models, arrival[order], np.concatenate(slos)[order],
+                   np.concatenate(mids)[order])
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "RequestTrace":
+        """Object-edge adapter: snapshot a list of ``Request``\\ s.
+
+        Preserves order (no sorting) so :meth:`write_back` can copy
+        results back into the same objects positionally.
+        """
+        n = len(requests)
+        models: list[str] = []
+        index: dict[str, int] = {}
+        arrival = np.empty(n)
+        slo = np.empty(n)
+        mid = np.empty(n, dtype=np.int32)
+        prio = np.empty(n, dtype=np.int16)
+        done = np.full(n, np.nan)
+        status = np.zeros(n, dtype=np.uint8)
+        preempted = np.zeros(n, dtype=bool)
+        for i, r in enumerate(requests):
+            k = index.get(r.model)
+            if k is None:
+                k = index[r.model] = len(models)
+                models.append(r.model)
+            mid[i] = k
+            arrival[i] = r.arrival_ms
+            slo[i] = r.slo_ms
+            prio[i] = r.priority
+            if r.dropped:
+                status[i] = UNSERVED if r.unserved else DROPPED
+            elif r.completion_ms is not None:
+                status[i] = COMPLETED
+                done[i] = r.completion_ms
+            preempted[i] = r.preempted
+        return cls(models, arrival, slo, mid, prio, done, status, preempted)
+
+    # ---- object-edge conversion -------------------------------------------
+
+    def write_back(self, requests: Sequence[Request]) -> None:
+        """Copy array state into ``requests`` (positional; same order as
+        :meth:`from_requests`).  Lists converted once (`tolist`) so the
+        per-request loop touches Python scalars, not numpy ones."""
+        arrival = self.arrival_ms.tolist()
+        slo = self.slo_ms.tolist()
+        done = self.completion_ms.tolist()
+        status = self.status.tolist()
+        priority = self.priority.tolist()
+        preempted = self.preempted.tolist()
+        for i, r in enumerate(requests):
+            st = status[i]
+            r.arrival_ms = arrival[i]
+            r.slo_ms = slo[i]
+            r.priority = priority[i]
+            r.completion_ms = done[i] if st == COMPLETED else None
+            r.dropped = st >= FIRST_DROP_STATUS
+            r.unserved = st == UNSERVED
+            r.preempted = preempted[i]
+
+    def to_requests(self) -> list[Request]:
+        """Materialize plain ``Request`` objects (API edges, small runs)."""
+        out = [Request(model=self.models[m], arrival_ms=0.0, slo_ms=0.0)
+               for m in self.model_id.tolist()]
+        self.write_back(out)
+        return out
+
+    def view(self, i: int) -> "RequestView":
+        return RequestView(self, int(i))
+
+    def views(self, idx: np.ndarray | None = None) -> list["RequestView"]:
+        ids = range(len(self)) if idx is None else idx.tolist()
+        return [RequestView(self, int(i)) for i in ids]
+
+    # ---- vectorized predicates --------------------------------------------
+
+    @property
+    def dropped(self) -> np.ndarray:
+        return self.status >= FIRST_DROP_STATUS
+
+    @property
+    def completed(self) -> np.ndarray:
+        return self.status == COMPLETED
+
+    def violated(self, idx: np.ndarray | None = None) -> np.ndarray:
+        """Dropped, or completed past the SLO (the paper counts both)."""
+        if idx is None:
+            st, done = self.status, self.completion_ms
+            arr, slo = self.arrival_ms, self.slo_ms
+        else:
+            st, done = self.status[idx], self.completion_ms[idx]
+            arr, slo = self.arrival_ms[idx], self.slo_ms[idx]
+        late = np.zeros(len(st), dtype=bool)
+        ok = st == COMPLETED
+        late[ok] = (done[ok] - arr[ok]) > slo[ok]
+        return (st >= FIRST_DROP_STATUS) | late
+
+
+class RequestView:
+    """Zero-copy per-request object facade over a :class:`RequestTrace`.
+
+    Implements the ``Request`` read/write surface (model, arrival_ms,
+    slo_ms, completion_ms, dropped, unserved, preempted, priority,
+    latency_ms, violated) so tests and diagnostics can treat trace rows
+    as objects.  Mutations go straight to the arrays.
+    """
+
+    __slots__ = ("_t", "_i")
+
+    def __init__(self, trace: RequestTrace, i: int):
+        self._t = trace
+        self._i = i
+
+    @property
+    def model(self) -> str:
+        return self._t.models[self._t.model_id[self._i]]
+
+    @property
+    def arrival_ms(self) -> float:
+        return float(self._t.arrival_ms[self._i])
+
+    @arrival_ms.setter
+    def arrival_ms(self, v: float) -> None:
+        self._t.arrival_ms[self._i] = v
+
+    @property
+    def slo_ms(self) -> float:
+        return float(self._t.slo_ms[self._i])
+
+    @slo_ms.setter
+    def slo_ms(self, v: float) -> None:
+        self._t.slo_ms[self._i] = v
+
+    @property
+    def priority(self) -> int:
+        return int(self._t.priority[self._i])
+
+    @priority.setter
+    def priority(self, v: int) -> None:
+        self._t.priority[self._i] = v
+
+    @property
+    def status(self) -> int:
+        return int(self._t.status[self._i])
+
+    @property
+    def completion_ms(self) -> float | None:
+        if self._t.status[self._i] != COMPLETED:
+            return None
+        return float(self._t.completion_ms[self._i])
+
+    @property
+    def dropped(self) -> bool:
+        return bool(self._t.status[self._i] >= FIRST_DROP_STATUS)
+
+    @property
+    def unserved(self) -> bool:
+        return bool(self._t.status[self._i] == UNSERVED)
+
+    @property
+    def preempted(self) -> bool:
+        return bool(self._t.preempted[self._i])
+
+    @property
+    def latency_ms(self) -> float | None:
+        done = self.completion_ms
+        return None if done is None else done - self.arrival_ms
+
+    @property
+    def violated(self) -> bool:
+        if self.dropped:
+            return True
+        lat = self.latency_ms
+        return lat is not None and lat > self.slo_ms
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"RequestView({self.model!r}, t={self.arrival_ms:.3f}, "
+                f"status={STATUS_NAMES.get(self.status, self.status)})")

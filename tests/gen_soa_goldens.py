@@ -1,0 +1,49 @@
+"""Regenerate tests/goldens/soa_metrics.json from the scenarios.
+
+Run from the repo root::
+
+    PYTHONPATH=src:tests python tests/gen_soa_goldens.py
+
+The committed golden file was generated at the PR-3 tip (the last commit
+with the object-based hot path), so it pins pre-refactor serving
+semantics.  Only regenerate it if a PR *deliberately* changes serving
+behavior — and say so in the PR description.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from soa_scenarios import (ENGINE_SCENARIOS, FABRIC_SCENARIOS,  # noqa: E402
+                           fabric_record, metrics_record,
+                           run_engine_scenario, run_fabric_scenario)
+
+OUT = os.path.join(os.path.dirname(__file__), "goldens", "soa_metrics.json")
+
+
+def main() -> int:
+    goldens = {}
+    for name in ENGINE_SCENARIOS:
+        trace, eng, met = run_engine_scenario(name)
+        goldens[name] = metrics_record(
+            met, trace, extra={"preemptions": eng.preemptions})
+        print(f"{name}: total={met.total} completed={met.completed} "
+              f"dropped={met.dropped} preemptions={eng.preemptions}")
+    for name in FABRIC_SCENARIOS:
+        trace, fabric, fm = run_fabric_scenario(name)
+        goldens[name] = fabric_record(trace, fm)
+        print(f"{name}: total={fm.fleet.total} "
+              f"completed={fm.fleet.completed} dropped={fm.fleet.dropped} "
+              f"shed={fm.shed_total()} preemptions={fm.preemptions}")
+    with open(OUT, "w") as f:
+        json.dump(goldens, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

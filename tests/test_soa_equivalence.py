@@ -1,0 +1,191 @@
+"""SoA hot path == pre-refactor object path, per request (ISSUE 4).
+
+``tests/goldens/soa_metrics.json`` was generated at the PR-3 tip — the
+last commit whose engine/fabric moved ``Request`` *objects* through
+deques — by ``tests/gen_soa_goldens.py``.  Every scenario here replays
+through today's struct-of-arrays hot path and must reproduce those
+records exactly: full per-request fingerprints (model, arrival, SLO,
+completion time, drop/unserved/preempted flags, class), SimMetrics
+totals, per-model and per-class tallies, and the fabric's dispatch
+accounting.  Coverage spans preemption, shed/re-route, failure-drain
+with casualty replay, mid-flight reorganization, and all three dispatch
+policies — so both the engine rewrite and the router's clear-time heap
+fast path are pinned against the object-path semantics.
+
+On top of the goldens: object-edge adapters (``Request`` lists in/out)
+and the SoA trace path must agree with each other, ``collect`` and
+``collect_arrays`` must tally identically, and parallel node workers
+must not change results.
+"""
+import json
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from soa_scenarios import (ENGINE_SCENARIOS, FABRIC_SCENARIOS, PROFS,
+                           build_fabric_scenario, fabric_record,
+                           fingerprint, metrics_record,
+                           run_engine_scenario, run_fabric_scenario)
+from repro.fabric import build_trace, build_trace_soa
+from repro.simulator import RequestTrace
+from repro.simulator.events import Request
+from repro.simulator.metrics import collect, collect_trace
+
+GOLDENS = json.load(open(os.path.join(
+    os.path.dirname(__file__), "goldens", "soa_metrics.json")))
+
+
+def _diff(name, rec):
+    gold = GOLDENS[name]
+    keys = sorted(set(rec) | set(gold))
+    return [f"{name}.{k}: new={rec.get(k)!r} golden={gold.get(k)!r}"
+            for k in keys if rec.get(k) != gold.get(k)]
+
+
+# ---------------------------------------------------------------------------
+# golden replay: the SoA path reproduces the object path bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_engine_scenarios_match_pre_refactor_goldens():
+    """Bare-engine runs (incl. preemption, overload drops, reorg)."""
+    for name in ENGINE_SCENARIOS:
+        trace, eng, met = run_engine_scenario(name)
+        rec = metrics_record(met, trace,
+                             extra={"preemptions": eng.preemptions})
+        assert rec == GOLDENS[name], "\n".join(_diff(name, rec))
+
+
+def test_fabric_scenarios_match_pre_refactor_goldens():
+    """Fabric runs: every policy, shed/re-route, failure-drain, ticks."""
+    for name in FABRIC_SCENARIOS:
+        trace, fabric, fm = run_fabric_scenario(name)
+        rec = fabric_record(trace, fm)
+        assert rec == GOLDENS[name], "\n".join(_diff(name, rec))
+
+
+# ---------------------------------------------------------------------------
+# object-edge adapter == SoA trace path
+# ---------------------------------------------------------------------------
+
+def test_object_adapter_and_soa_trace_serve_identically():
+    """``serve(list[Request])`` and ``serve_trace(RequestTrace)`` agree,
+    per request — the 4-node scenario covers network delay mutation,
+    priorities, and the router's clear-time fast path."""
+    fabric_a, reqs = build_fabric_scenario("fabric-4n")
+    assert isinstance(reqs, list) and isinstance(reqs[0], Request)
+    fm_a = fabric_a.serve(reqs)
+
+    fabric_b, reqs_b = build_fabric_scenario("fabric-4n")
+    trace = RequestTrace.from_requests(reqs_b)
+    fm_b = fabric_b.serve_trace(trace)
+
+    assert fingerprint(reqs) == fingerprint(trace.views())
+    assert fm_a.fleet.per_class == fm_b.fleet.per_class
+    assert fm_a.fleet.per_model == fm_b.fleet.per_model
+    assert fm_a.stats.dispatched == fm_b.stats.dispatched
+
+
+def test_failure_drain_object_adapter_matches_soa():
+    """Casualty replay (arrival/SLO rewrites) survives both edges."""
+    fabric_a, reqs = build_fabric_scenario("fabric-faildrain")
+    fm_a = fabric_a.serve(reqs)
+    fabric_b, reqs_b = build_fabric_scenario("fabric-faildrain")
+    fm_b = fabric_b.serve_trace(RequestTrace.from_requests(reqs_b))
+    assert fm_a.stats.failed_over == fm_b.stats.failed_over
+    assert metrics_record(fm_a.fleet, reqs)["fingerprint"] == \
+        GOLDENS["fabric-faildrain"]["fingerprint"]
+    assert fm_a.fleet.per_class == fm_b.fleet.per_class
+
+
+def test_build_trace_objects_equal_build_trace_soa():
+    """The object and SoA trace builders consume the rng identically."""
+    from repro.core.scenarios import hotspot_scenario
+    scn = hotspot_scenario(2, mult=3.0)   # includes thinned streams
+    reqs = build_trace(scn, PROFS, 6.0, seed=21)
+    trace = build_trace_soa(scn, PROFS, 6.0, seed=21)
+    assert len(reqs) == len(trace)
+    assert [r.model for r in reqs] == \
+        [trace.models[m] for m in trace.model_id.tolist()]
+    assert np.array_equal(np.asarray([r.arrival_ms for r in reqs]),
+                          trace.arrival_ms)
+    assert [r.priority for r in reqs] == trace.priority.tolist()
+
+
+def test_parallel_node_workers_are_bit_identical():
+    """Forked node execution reproduces the sequential golden."""
+    fabric, reqs = build_fabric_scenario("fabric-4n")
+    fabric.cfg.node_workers = 2
+    trace = RequestTrace.from_requests(reqs)
+    fm = fabric.serve_trace(trace)
+    rec = fabric_record(trace.views(), fm)
+    assert rec == GOLDENS["fabric-4n"], \
+        "\n".join(_diff("fabric-4n", rec))
+
+
+# ---------------------------------------------------------------------------
+# metric collection: object loop == vectorized reduction
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_collect_equals_collect_trace(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 400))
+    models = ["goo", "res", "vgg"]
+    reqs = []
+    for k in range(n):
+        r = Request(model=models[int(rng.integers(3))],
+                    arrival_ms=float(rng.uniform(0, 1e4)),
+                    slo_ms=float(rng.uniform(5, 150)),
+                    priority=int(rng.integers(3)))
+        kind = int(rng.integers(4))
+        if kind == 0:                      # completed (maybe late)
+            r.completion_ms = r.arrival_ms + float(rng.uniform(0, 300))
+        elif kind == 1:                    # SLO-expiry drop
+            r.dropped = True
+        elif kind == 2:                    # conservation drop
+            r.dropped = True
+            r.unserved = True
+        # kind == 3: pending (never resolved)
+        r.preempted = bool(rng.integers(2))
+        reqs.append(r)
+    m_obj = collect(reqs, 1e4)
+    m_soa = collect_trace(RequestTrace.from_requests(reqs), 1e4)
+    assert (m_obj.total, m_obj.completed, m_obj.dropped,
+            m_obj.slo_violations, m_obj.preempted) == \
+        (m_soa.total, m_soa.completed, m_soa.dropped,
+         m_soa.slo_violations, m_soa.preempted)
+    assert m_obj.per_model == m_soa.per_model
+    assert m_obj.per_class == m_soa.per_class
+
+
+# ---------------------------------------------------------------------------
+# trace round-trips
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_trace_object_roundtrip(seed):
+    """from_requests -> to_requests preserves every field and status."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for k in range(int(rng.integers(1, 120))):
+        r = Request(model=f"m{int(rng.integers(4))}",
+                    arrival_ms=float(rng.uniform(0, 1e4)),
+                    slo_ms=float(rng.uniform(1, 200)),
+                    priority=int(rng.integers(3)),
+                    preempted=bool(rng.integers(2)))
+        kind = int(rng.integers(4))
+        if kind == 0:
+            r.completion_ms = r.arrival_ms + float(rng.uniform(0, 250))
+        elif kind == 1:
+            r.dropped = True
+        elif kind == 2:
+            r.dropped, r.unserved = True, True
+        reqs.append(r)
+    back = RequestTrace.from_requests(reqs).to_requests()
+    assert [(r.model, r.arrival_ms, r.slo_ms, r.priority, r.completion_ms,
+             r.dropped, r.unserved, r.preempted) for r in reqs] == \
+        [(r.model, r.arrival_ms, r.slo_ms, r.priority, r.completion_ms,
+          r.dropped, r.unserved, r.preempted) for r in back]
