@@ -162,6 +162,25 @@ def main() -> int:
         print("SMOKE FAIL: serving hot path over wall-clock budget "
               "(or conservation broken)")
         return 1
+    # the migration epoch loop rides the same wall budget: a drifting
+    # 2-node fleet with live rescheduling must stay cheap — the epoch
+    # dispatch + per-delta partition solves are not allowed to dominate
+    # the serving hot path.
+    from benchmarks.fig_migration import run_point as migration_point
+    t0 = time.perf_counter()
+    p = migration_point(2, horizon_s=20.0)
+    mig_wall = time.perf_counter() - t0
+    m = p["migration"]
+    ok = mig_wall <= args.budget_s and m["conserved"] \
+        and p["reroute_only"]["conserved"]
+    print(f"engine-smoke-migration requests={m['requests']} "
+          f"wall={mig_wall:.2f}s budget={args.budget_s:.0f}s "
+          f"migrations={m['migrations']} conserved={m['conserved']} "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print("SMOKE FAIL: migration serving path over wall-clock "
+              "budget (or conservation broken)")
+        return 1
     return 0
 
 

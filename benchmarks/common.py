@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 
 from repro.core import (ElasticPartitioning, GuidedSelfTuning,
@@ -29,6 +31,31 @@ def timed(fn, *args, **kwargs):
     t0 = time.perf_counter()
     out = fn(*args, **kwargs)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def merge_bench_json(path: str, key: str, payload: dict) -> None:
+    """Write ``payload`` under ``key`` in a shared benchmark JSON file.
+
+    Several benchmarks share one trajectory artifact (BENCH_fabric.json
+    holds both the scaling sweep and the migration contrast); each
+    read-modify-writes only its own top-level key, so re-running one
+    benchmark never clobbers the other's numbers.  Pre-PR-5 flat files
+    (one payload at the top level, recognizable by their ``benchmark``
+    field) are folded under their own name on first contact.
+    """
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+    if "benchmark" in doc:            # legacy flat layout
+        doc = {doc["benchmark"]: doc}
+    doc[key] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
 
 
 class Row:

@@ -17,11 +17,10 @@ CLI: ``python -m benchmarks.fig_fabric_scaling --tiny`` runs the 2-node,
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
 
-from benchmarks.common import Row, setup
+from benchmarks.common import Row, merge_bench_json, setup
 from repro.core.scenarios import fabric_node_sweep
 from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
                           build_trace_soa)
@@ -93,9 +92,7 @@ def run(fast: bool = False) -> list[Row]:
         payload = {"benchmark": "fabric_scaling", "horizon_s": horizon_s,
                    "policy": "least-loaded", "preemption": True,
                    "sweep": sweep}
-        with open(OUT_PATH, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
+        merge_bench_json(OUT_PATH, "fabric_scaling", payload)
     rows = []
     for s in sweep:
         cls = " ".join(

@@ -1,0 +1,177 @@
+"""Global rescheduling vs re-route-only on a drifting-zipf fleet (ISSUE 5).
+
+Beyond-paper (ROADMAP "fabric-level global rescheduling"): the fleet's
+popularity mix drifts — the Zipf rank-1 model rotates onto what the
+partitioned placement provisioned as the coldest model — and the same
+seeded trace is served twice per fleet size:
+
+  * **re-route-only** — the PR-3/4 fabric: placement frozen at build
+    time, the router's shed/re-route/preempt machinery absorbs what it
+    can.  Capacity is stranded on nodes serving yesterday's hot model.
+  * **migration** — the PR-5 global rescheduler moves placement live:
+    bounded per-epoch deltas, warm-up charges on receivers, donors
+    draining to their cut.
+
+Reports per-class SLO *attainment* (1 - violation rate) and total
+goodput; the acceptance bar is migration beating re-route-only on
+gold-class attainment AND goodput at every fleet size.  Results merge
+into ``BENCH_fabric.json`` under the ``"migration"`` key (alongside the
+scaling sweep's ``"fabric_scaling"``).
+
+CLI: ``python -m benchmarks.fig_migration --tiny`` runs a 3-node CI
+smoke and exits non-zero on conservation breaks or a migration loss.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Row, merge_bench_json, setup
+from repro.core.scenarios import drifting_zipf_scenario
+from repro.fabric import FabricConfig, build_fabric, build_trace_soa
+from repro.fabric.priority import CLASS_NAMES
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fabric.json")
+
+#: the drifting-zipf operating point: hot-model share ~68% (skew 2.4),
+#: fleet at ~110% of the placement heuristic's capacity — hard enough
+#: that gold bleeds on the stranded homes, so migration has something
+#: to win on every class
+SKEW = 2.4
+UTIL = 1.1
+HORIZON_S = 36.0
+N_PHASES = 3
+NODE_COUNTS = (8, 16)
+MIGRATION_PERIOD_MS = 2_000.0
+MAX_MIGRATIONS_PER_EPOCH = 4
+
+
+def _cfg(migrations: bool, horizon_s: float,
+         period_ms: float = MIGRATION_PERIOD_MS) -> FabricConfig:
+    return FabricConfig(
+        horizon_ms=horizon_s * 1e3, policy="least-loaded",
+        preemption=True, migrations=migrations,
+        migration_period_ms=period_ms,
+        max_migrations_per_epoch=MAX_MIGRATIONS_PER_EPOCH,
+        node_workers=os.cpu_count() or 1)
+
+
+def _serve(scn, profs, cfg, horizon_s: float, seed: int) -> dict:
+    t0 = time.perf_counter()
+    fabric = build_fabric(scn, profs, cfg)
+    trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    fm = fabric.serve_trace(trace)
+    wall_s = time.perf_counter() - t0
+    per_class = {}
+    for level, pc in sorted(fm.fleet.per_class.items()):
+        per_class[CLASS_NAMES.get(level, str(level))] = {
+            "total": pc["total"],
+            "violations": pc["violations"],
+            "slo_attainment": 1.0 - pc["violations"] / max(pc["total"], 1),
+        }
+    return {
+        "requests": fm.fleet.total,
+        "completed": fm.fleet.completed,
+        "dropped": fm.fleet.dropped,
+        "conserved": fm.fleet.completed + fm.fleet.dropped
+        == fm.fleet.total,
+        "goodput_req_s": fm.goodput_req_s,
+        "violation_rate": fm.violation_rate,
+        "per_class": per_class,
+        "migrations": fm.migrations,
+        "handed_back": fm.stats.handed_back,
+        "shed": {str(k): v for k, v in sorted(fm.stats.shed.items())},
+        "wall_s": wall_s,
+    }
+
+
+def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
+              seed: int = 0, skew: float = SKEW,
+              util: float = UTIL) -> dict:
+    """Serve the same drifting trace with and without migrations."""
+    profs, _intf, _ = setup()
+    scn = drifting_zipf_scenario(n_nodes, horizon_s=horizon_s,
+                                 n_phases=N_PHASES, skew=skew, util=util)
+    base = _serve(scn, profs, _cfg(False, horizon_s), horizon_s, seed)
+    mig = _serve(scn, profs, _cfg(True, horizon_s), horizon_s, seed)
+    return {
+        "n_nodes": n_nodes,
+        "horizon_s": horizon_s,
+        "skew": skew,
+        "util": util,
+        "reroute_only": base,
+        "migration": mig,
+        "gold_attainment_delta":
+            mig["per_class"]["gold"]["slo_attainment"]
+            - base["per_class"]["gold"]["slo_attainment"],
+        "goodput_gain":
+            mig["goodput_req_s"] / max(base["goodput_req_s"], 1e-9),
+    }
+
+
+def run(fast: bool = False) -> list[Row]:
+    node_counts = (4,) if fast else NODE_COUNTS
+    horizon_s = 18.0 if fast else HORIZON_S
+    points = [run_point(n, horizon_s) for n in node_counts]
+    if not fast:
+        payload = {
+            "benchmark": "migration_vs_reroute",
+            "drift": {"skew": SKEW, "util": UTIL, "n_phases": N_PHASES,
+                      "horizon_s": HORIZON_S},
+            "migration_period_ms": MIGRATION_PERIOD_MS,
+            "max_migrations_per_epoch": MAX_MIGRATIONS_PER_EPOCH,
+            "points": points,
+        }
+        merge_bench_json(OUT_PATH, "migration", payload)
+    rows = []
+    for p in points:
+        b, m = p["reroute_only"], p["migration"]
+        rows.append(Row(
+            f"fabric/migration_{p['n_nodes']}n",
+            (b["wall_s"] + m["wall_s"]) * 1e6,
+            f"requests={b['requests']} "
+            f"gold_attain={100*b['per_class']['gold']['slo_attainment']:.2f}%"
+            f"->{100*m['per_class']['gold']['slo_attainment']:.2f}% "
+            f"goodput={b['goodput_req_s']:.0f}->{m['goodput_req_s']:.0f}"
+            f"req/s (x{p['goodput_gain']:.2f}) "
+            f"migrations={m['migrations']} handed_back={m['handed_back']}"))
+    return rows
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="3-node CI smoke: conservation + migration win")
+    args = ap.parse_args()
+    if not args.tiny:
+        for row in run():
+            print(row.csv())
+        return 0
+    p = run_point(3, horizon_s=15.0)
+    b, m = p["reroute_only"], p["migration"]
+    print(f"migration-tiny n=3 requests={b['requests']} "
+          f"migrations={m['migrations']} "
+          f"goodput {b['goodput_req_s']:.0f}->{m['goodput_req_s']:.0f} "
+          f"gold {100*b['per_class']['gold']['slo_attainment']:.2f}%->"
+          f"{100*m['per_class']['gold']['slo_attainment']:.2f}%")
+    if not (b["conserved"] and m["conserved"]):
+        print("SMOKE FAIL: request conservation broken")
+        return 1
+    if m["migrations"] == 0:
+        print("SMOKE FAIL: the drift never triggered a migration")
+        return 1
+    if m["goodput_req_s"] < b["goodput_req_s"]:
+        print("SMOKE FAIL: migration lost goodput to re-route-only")
+        return 1
+    if m["per_class"]["gold"]["slo_attainment"] \
+            < b["per_class"]["gold"]["slo_attainment"]:
+        print("SMOKE FAIL: migration lost gold-class SLO attainment "
+              "to re-route-only")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

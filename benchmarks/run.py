@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig14_fluctuation",
     "benchmarks.fig15_ideal_comparison",
     "benchmarks.fig_fabric_scaling",
+    "benchmarks.fig_migration",
     "benchmarks.bench_engine",
     "benchmarks.kernels_bench",
     "benchmarks.ablations",

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 
 from repro.core.profiles import ModelProfile
 
@@ -105,6 +106,17 @@ class FabricScenario:
     crowd).  ``fail_at_s`` lists (node_id, t_s) node deaths.
     ``node_weights`` biases the router's model-affinity policy (skewed
     per-node popularity — sticky sessions concentrating on few nodes).
+
+    ``rate_phases`` makes the fleet mix *drift*: a sorted tuple of
+    ``(t_start_s, fleet_rates)`` segments; from each start instant the
+    fleet rates step to that segment's map (models absent from a segment
+    are at zero there).  ``rates`` stays the t=0 mix — it is what the
+    fleet is provisioned for, so a drift away from it strands capacity
+    unless placement moves too (the migration experiments).
+
+    ``placement`` partitions the fleet: entry ``i`` is node ``i``'s
+    provisioned ``{model: req/s}`` map.  ``None`` keeps the classic
+    every-node-serves-every-model 1/N split.
     """
 
     name: str
@@ -115,10 +127,42 @@ class FabricScenario:
     hotspot: tuple[float, float, float] | None = None  # (t0_s, t1_s, mult)
     hot_models: tuple[str, ...] = ()
     fail_at_s: tuple[tuple[int, float], ...] = ()
+    #: popularity drift: ((t_start_s, fleet_rates), ...), sorted by start.
+    #: Mutually exclusive with ``hotspot`` (a burst is expressible as a
+    #: phase segment; silently combining the two would drop one).
+    rate_phases: tuple[tuple[float, dict[str, float]], ...] | None = None
+    #: per-node provisioned rates (partitioned placement); None = 1/N split
+    placement: tuple[dict[str, float], ...] | None = None
+
+    def __post_init__(self):
+        if self.rate_phases is not None and self.hotspot is not None:
+            raise ValueError(
+                "rate_phases and hotspot cannot be combined: express "
+                "the burst as a phase segment instead")
+
+    def models(self) -> list[str]:
+        """Every model named anywhere in the scenario (sorted)."""
+        names = set(self.rates)
+        for _t0, seg in self.rate_phases or ():
+            names.update(seg)
+        return sorted(names)
 
     def rate_fn(self, model: str):
         """Instantaneous fleet rate of ``model`` as a function of t (s)."""
         base = self.rates.get(model, 0.0)
+        if self.rate_phases is not None:
+            steps = sorted((t0, seg.get(model, 0.0))
+                           for t0, seg in self.rate_phases)
+
+            def fn(t: float) -> float:
+                r = base
+                for t0, seg_r in steps:
+                    if t >= t0:
+                        r = seg_r
+                    else:
+                        break
+                return r
+            return fn
         if self.hotspot is None or model not in self.hot_models:
             return lambda t: base
         t0, t1, mult = self.hotspot
@@ -129,9 +173,20 @@ class FabricScenario:
 
     def peak_rate(self, model: str) -> float:
         base = self.rates.get(model, 0.0)
+        if self.rate_phases is not None:
+            return max([base] + [seg.get(model, 0.0)
+                                 for _t0, seg in self.rate_phases])
         if self.hotspot is not None and model in self.hot_models:
             return base * self.hotspot[2]
         return base
+
+    def varies(self, model: str) -> bool:
+        """True iff ``model``'s fleet rate changes over the horizon."""
+        if self.rate_phases is not None:
+            base = self.rates.get(model, 0.0)
+            return any(seg.get(model, 0.0) != base
+                       for _t0, seg in self.rate_phases)
+        return self.hotspot is not None and model in self.hot_models
 
 
 def fabric_node_sweep(per_node_rates: dict[str, float] | None = None,
@@ -186,6 +241,154 @@ def failure_drain_scenario(n_nodes: int,
         name=f"faildrain-{n_nodes}n", n_nodes=n_nodes,
         rates={m: r * n_nodes for m, r in per_node.items()},
         priority_mix=priority_mix,
+        fail_at_s=((fail_node, fail_at_s),))
+
+
+# ---------------------------------------------------------------------------
+# migration scenarios (ROADMAP "fabric-level global rescheduling"): the
+# fleet mix drifts away from the provisioned placement, stranding capacity
+# on nodes that serve yesterday's hot model unless placement moves too.
+# ---------------------------------------------------------------------------
+
+def unit_load(model: str, rate: float) -> float:
+    """Heuristic node-capacity cost of serving ``model`` at ``rate``.
+
+    Calibrated against :data:`SWEEP_NODE_RATES`: that mix is a known
+    comfortably-schedulable full node, and treating each of its models as
+    one equal share makes ``rate / (n_models * sweep_rate)`` the fraction
+    of a node the stream costs.  Placement generators use this to
+    bin-pack; :class:`~repro.core.elastic.ElasticPartitioning` remains
+    the ground truth at build time.
+    """
+    ref = SWEEP_NODE_RATES.get(model)
+    if ref is None:
+        ref = sum(SWEEP_NODE_RATES.values()) / len(SWEEP_NODE_RATES)
+    return rate / (len(SWEEP_NODE_RATES) * ref)
+
+
+def zipf_model_rates(models: tuple[str, ...], total_load: float,
+                     skew: float = 1.1, hot_index: int = 0
+                     ) -> dict[str, float]:
+    """Fleet rates with Zipf(``skew``) popularity over ``models``.
+
+    ``models[hot_index]`` is rank 1; ranks rotate from there.  The zipf
+    weights split ``total_load`` *node-capacity units* (see
+    :func:`unit_load`), then convert to req/s per model — so the fleet's
+    aggregate load is mix-independent and drifting the hot index moves
+    demand without changing the total.
+    """
+    n = len(models)
+    w = [1.0 / (((i - hot_index) % n) + 1) ** skew for i in range(n)]
+    total_w = sum(w)
+    out = {}
+    for m, wi in zip(models, w):
+        load_m = total_load * wi / total_w
+        # invert unit_load: rate = load * n_models * sweep_rate
+        ref = SWEEP_NODE_RATES.get(
+            m, sum(SWEEP_NODE_RATES.values()) / len(SWEEP_NODE_RATES))
+        out[m] = load_m * len(SWEEP_NODE_RATES) * ref
+    return out
+
+
+def partition_placement(rates: dict[str, float], n_nodes: int,
+                        max_node_share: float = 0.5
+                        ) -> tuple[dict[str, float], ...]:
+    """Bin-pack fleet rates onto nodes: each model gets few *homes*.
+
+    Each model's fleet rate is split across ``ceil(load / max_node_share)``
+    homes (so no single node carries more than ``max_node_share`` of its
+    capacity for one model) chosen greedily least-loaded-first.  Models
+    are placed hottest-first, so the resulting placement concentrates
+    cold models on few nodes — exactly the shape popularity drift breaks.
+    """
+    placement: list[dict[str, float]] = [{} for _ in range(n_nodes)]
+    load = [0.0] * n_nodes
+    for m, r in sorted(rates.items(), key=lambda kv: (-unit_load(*kv),
+                                                      kv[0])):
+        if r <= 0:
+            continue
+        lm = unit_load(m, r)
+        homes = max(1, min(n_nodes, math.ceil(lm / max_node_share)))
+        share = r / homes
+        order = sorted(range(n_nodes), key=lambda i: (load[i], i))
+        for i in order[:homes]:
+            placement[i][m] = placement[i].get(m, 0.0) + share
+            load[i] += lm / homes
+    return tuple(placement)
+
+
+PAPER_MODELS: tuple[str, ...] = ("le", "goo", "res", "ssd", "vgg")
+
+
+def drifting_zipf_scenario(n_nodes: int,
+                           models: tuple[str, ...] = PAPER_MODELS,
+                           horizon_s: float = 48.0,
+                           n_phases: int = 3,
+                           skew: float = 1.1,
+                           util: float = 0.75,
+                           priority_mix: tuple[tuple[int, float], ...]
+                           = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """Popularity drift: the Zipf rank-1 model migrates across the vocab.
+
+    Phase 0's hot model is generously provisioned (partitioned
+    placement); each subsequent phase hands rank 1 to what was the
+    *coldest* model — the worst case for a frozen placement, because the
+    new hot model has the fewest homes.  Fleet aggregate load stays at
+    ``util * n_nodes`` capacity units throughout, so a re-route-only
+    fabric is not globally overloaded — its capacity is merely stranded
+    in the wrong place.
+    """
+    phase0 = zipf_model_rates(models, util * n_nodes, skew, hot_index=0)
+    phases = []
+    for k in range(1, n_phases):
+        hot = (-k) % len(models)
+        phases.append((k * horizon_s / n_phases,
+                       zipf_model_rates(models, util * n_nodes, skew,
+                                        hot_index=hot)))
+    return FabricScenario(
+        name=f"drift-zipf-{n_nodes}n", n_nodes=n_nodes, rates=phase0,
+        priority_mix=priority_mix, rate_phases=tuple(phases),
+        placement=partition_placement(phase0, n_nodes))
+
+
+def hotspot_migration_scenario(n_nodes: int,
+                               models: tuple[str, ...] = PAPER_MODELS,
+                               t0_s: float = 8.0, t1_s: float = 30.0,
+                               mult: float = 3.0,
+                               skew: float = 1.1,
+                               util: float = 0.7,
+                               priority_mix: tuple[tuple[int, float], ...]
+                               = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """Flash hotspot on the *coldest* (fewest-homes) model.
+
+    Unlike :func:`hotspot_scenario` (uniform placement, burst absorbed by
+    shed/re-route), here the burst lands on a model whose partitioned
+    placement gives it the least capacity — only migrating it onto idle
+    nodes helps.
+    """
+    rates = zipf_model_rates(models, util * n_nodes, skew, hot_index=0)
+    coldest = min(rates, key=lambda m: (unit_load(m, rates[m]), m))
+    return FabricScenario(
+        name=f"hotspot-mig-{n_nodes}n", n_nodes=n_nodes, rates=rates,
+        priority_mix=priority_mix, hotspot=(t0_s, t1_s, mult),
+        hot_models=(coldest,),
+        placement=partition_placement(rates, n_nodes))
+
+
+def drift_failure_scenario(n_nodes: int,
+                           fail_node: int = 0, fail_at_s: float = 18.0,
+                           horizon_s: float = 36.0,
+                           **kwargs) -> FabricScenario:
+    """Popularity drift plus a node death mid-drift.
+
+    Node 0 carries the phase-0 hot model (placement puts the hottest
+    shares on the emptiest nodes first), so with the default arguments
+    the failure hits a node the global rescheduler is actively reshaping
+    — the donor-fails-mid-migration case.
+    """
+    scn = drifting_zipf_scenario(n_nodes, horizon_s=horizon_s, **kwargs)
+    return dataclasses.replace(
+        scn, name=f"drift-fail-{n_nodes}n",
         fail_at_s=((fail_node, fail_at_s),))
 
 

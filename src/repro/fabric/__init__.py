@@ -6,6 +6,8 @@ dispatches the client trace across nodes under a pluggable policy, with
 priority classes, preemption, and a network delay model layered on top.
 """
 from repro.fabric.fabric import FabricConfig, FabricMetrics, ServingFabric
+from repro.fabric.global_scheduler import (GlobalScheduler, MigrationEvent,
+                                           NodeUpdate)
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.priority import (BRONZE, GOLD, PRIORITY_CLASSES, SILVER,
@@ -16,7 +18,8 @@ from repro.fabric.workload import build_fabric, build_trace, build_trace_soa
 
 __all__ = [
     "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
-    "FabricNode", "FabricRouter", "GOLD", "NetworkModel", "NodeSpec",
+    "FabricNode", "FabricRouter", "GOLD", "GlobalScheduler",
+    "MigrationEvent", "NetworkModel", "NodeSpec", "NodeUpdate",
     "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
     "ServingFabric", "assign_priorities", "build_fabric", "build_trace",
     "build_trace_soa", "draw_priorities",

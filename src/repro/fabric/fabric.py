@@ -64,6 +64,32 @@ class FabricConfig:
     #: keeps ``node.engine`` inspectable).  Needs ``os.fork``; silently
     #: falls back to sequential where unavailable.
     node_workers: int = 1
+    # ---- fleet-level global rescheduling (live model migration) ----
+    #: enable the migration epoch loop.  Off by default: a migration-
+    #: blind fabric is byte-identical to the PR-4 serving path.
+    migrations: bool = False
+    #: migration-epoch length: the fleet controller observes one epoch,
+    #: decides at its boundary, and the delta lands on the next
+    migration_period_ms: float = 4_000.0
+    #: placement-delta budget per epoch (model instances added + evicted)
+    max_migrations_per_epoch: int = 2
+    #: receiver-side load/warm-up charge before a migrated-in model's
+    #: traffic retargets (plus seeded uniform jitter below)
+    migration_warmup_ms: float = 400.0
+    migration_warmup_jitter_ms: float = 0.0
+    migration_seed: int = 0
+    #: hysteresis: only chase a model whose forecast exceeds its fleet-
+    #: provisioned rate by this relative margin AND this many req/s
+    #: (the absolute floor keeps Poisson noise from churning placement)
+    migration_min_deficit: float = 0.15
+    migration_min_rate_req_s: float = 10.0
+    #: consecutive over-threshold epochs before a model's deficit is
+    #: acted on.  Re-partitioning a node is never free — it forfeits the
+    #: incidental burst capacity of its old gpu-lets — so one noisy
+    #: window must not reshape the fleet.
+    migration_patience: int = 2
+    #: router->new-home lag charged to requests a donor hands back
+    handback_ms: float = 5.0
 
 
 @dataclasses.dataclass
@@ -84,6 +110,13 @@ class FabricMetrics:
     per_node: dict[int, SimMetrics]
     stats: DispatchStats
     preemptions: int
+    #: applied placement deltas, in decision order (empty when the
+    #: migration loop is off or never fired)
+    migration_events: list = dataclasses.field(default_factory=list)
+
+    @property
+    def migrations(self) -> int:
+        return len(self.migration_events)
 
     @property
     def goodput_req_s(self) -> float:
@@ -104,8 +137,26 @@ class ServingFabric:
                  affinity_weights: dict[int, float] | None = None):
         self.profiles = dict(profiles)
         self.cfg = cfg or FabricConfig()
+        if self.cfg.migrations and self.cfg.period_s is not None:
+            # a per-node controller reschedules from its own observed
+            # rates, which never include a freshly-migrated-in model: its
+            # next reorg would silently evict what the fleet just placed
+            # (and un-pause migration cuts early).  Until the two
+            # subscribers are reconciled, the combination is refused
+            # rather than half-working.
+            raise ValueError(
+                "FabricConfig.migrations and per-node controllers "
+                "(period_s) cannot be combined yet")
         self.nodes = list(nodes)
         self._served = False
+        #: applied placement deltas (filled by the migration epoch loop)
+        self.migration_events: list = []
+        #: index arrays re-dispatched after a reset (casualty replays and
+        #: migration hand-backs) — the no-double-serve audit trail: a
+        #: request index may appear in k+1 node slices only if it was
+        #: reset and replayed k times
+        self.replayed_ids: list[np.ndarray] = []
+        self.global_scheduler = None
         self.router = FabricRouter(
             self.nodes, policy=self.cfg.policy, network=self.cfg.network,
             shed_backlog_ms=self.cfg.shed_backlog_ms,
@@ -123,19 +174,27 @@ class ServingFabric:
               node_cluster: ClusterSpec = PAPER_CLUSTER,
               scheduler_factory=None,
               fail_at_ms: Mapping[int, float] | None = None,
-              affinity_weights: dict[int, float] | None = None
+              affinity_weights: dict[int, float] | None = None,
+              placement: Sequence[Mapping[str, float]] | None = None
               ) -> "ServingFabric":
         """Stand up an N-node fabric provisioned for fleet-total ``rates``.
 
         Each node is scheduled independently for an equal 1/N share of the
         fleet rates (the router balances arrivals, so equal shares are the
-        steady-state expectation).  ``scheduler_factory(profiles, cluster)``
-        returns a scheduler per node; defaults to plain
+        steady-state expectation) — unless ``placement`` partitions the
+        fleet: entry ``i`` is then node ``i``'s own ``{model: req/s}``
+        map (few homes per model; the shape the migration experiments
+        start from).  ``scheduler_factory(profiles, cluster)`` returns a
+        scheduler per node; defaults to plain
         :class:`ElasticPartitioning`.  ``fail_at_ms`` maps node_id -> the
         wall-clock instant that node dies (failure-drain scenarios).
         """
         cfg = cfg or FabricConfig()
         fail_at_ms = dict(fail_at_ms or {})
+        if placement is not None and len(placement) != n_nodes:
+            raise ValueError(
+                f"placement has {len(placement)} entries for "
+                f"{n_nodes} nodes")
         # the default scheduler is deterministic, so identical nodes can
         # share one solved partitioning; custom factories might not be
         default_sched = scheduler_factory is None
@@ -147,6 +206,8 @@ class ServingFabric:
         nodes = []
         static_schedule = None
         for i in range(n_nodes):
+            node_share = share if placement is None else \
+                {m: r for m, r in placement[i].items() if r > 0}
             sched = scheduler_factory(profiles, node_cluster)
             on_tick = None
             period_ms = None
@@ -156,10 +217,10 @@ class ServingFabric:
                 ctrl = ServingController(sched, profiles,
                                          period_s=cfg.period_s,
                                          reorg_s=cfg.reorg_s)
-                schedule, on_tick = ctrl.make_subscriber(share)
+                schedule, on_tick = ctrl.make_subscriber(node_share)
                 period_ms = cfg.period_s * 1e3
                 reorg_ms = cfg.reorg_s * 1e3
-            elif default_sched:
+            elif default_sched and placement is None:
                 # identical nodes get identical static schedules: solve
                 # the partitioning once and share the (read-only) result
                 # — at 64 nodes this is most of the fleet build time
@@ -167,7 +228,7 @@ class ServingFabric:
                     static_schedule = sched.schedule(share)
                 schedule = static_schedule
             else:
-                schedule = sched.schedule(share)
+                schedule = sched.schedule(node_share)
             ecfg = EngineConfig(
                 horizon_ms=cfg.horizon_ms, acc=node_cluster.accelerator,
                 period_ms=period_ms, reorg_ms=reorg_ms,
@@ -208,7 +269,10 @@ class ServingFabric:
         self._served = True
         for node in self.nodes:
             node.trace = trace
-        self.router.dispatch(trace)
+        if self.cfg.migrations and self.cfg.migration_period_ms > 0:
+            self._dispatch_with_migrations(trace)
+        else:
+            self.router.dispatch(trace)
         # failing nodes run first (in failure order): their casualties are
         # re-dispatched to nodes that have not executed yet.
         failing = sorted((n for n in self.nodes if n.fails_in_run()),
@@ -224,18 +288,9 @@ class ServingFabric:
                 # shrinks by the time already burned waiting on the dead
                 # node — so the survivor's SLO verdict stays
                 # client-consistent (same trick as the network delay).
-                arr = trace.arrival_ms
-                t_replay = np.maximum(arr[lost], node.spec.fail_at_ms) \
-                    + self.cfg.failover_ms
-                new_slo = trace.slo_ms[lost] - (t_replay - arr[lost])
-                trace.slo_ms[lost] = new_slo
-                arr[lost] = t_replay
-                hopeless = new_slo <= 0.0
-                # already hopeless: count the loss
-                trace.status[lost[hopeless]] = DROPPED
-                replay = lost[~hopeless]
-                if len(replay):
-                    self.router.dispatch(trace, replay, failover=True)
+                self._replay(trace, lost, node.spec.fail_at_ms,
+                             self.cfg.failover_ms)
+        self._run_donors(trace)
         self._run_healthy(trace)
         fleet = collect_trace(trace, self.cfg.horizon_ms)
         per_node = {n.node_id: n.metrics for n in self.nodes
@@ -244,7 +299,125 @@ class ServingFabric:
                           else n.preemptions for n in self.nodes)
         return FabricMetrics(fleet=fleet, per_node=per_node,
                              stats=self.router.stats,
-                             preemptions=preemptions)
+                             preemptions=preemptions,
+                             migration_events=list(self.migration_events))
+
+    def _replay(self, trace: RequestTrace, lost: np.ndarray,
+                t_floor_ms: float, lag_ms: float,
+                handback: bool = False) -> None:
+        """Re-dispatch reset requests from the router (casualty or
+        hand-back): the replay time becomes the node-side arrival and the
+        SLO budget shrinks by the time already burned, so the new home's
+        verdict stays client-consistent; a request whose budget is gone
+        drops immediately."""
+        arr = trace.arrival_ms
+        t_replay = np.maximum(arr[lost], t_floor_ms) + lag_ms
+        new_slo = trace.slo_ms[lost] - (t_replay - arr[lost])
+        trace.slo_ms[lost] = new_slo
+        arr[lost] = t_replay
+        hopeless = new_slo <= 0.0
+        # already hopeless: count the loss
+        trace.status[lost[hopeless]] = DROPPED
+        replay = lost[~hopeless]
+        if len(replay):
+            self.replayed_ids.append(replay)
+            self.router.dispatch(trace, replay, failover=not handback,
+                                 handback=handback)
+
+    def _dispatch_with_migrations(self, trace: RequestTrace) -> None:
+        """Route the trace epoch by epoch, migrating placement between.
+
+        Each migration epoch is dispatched under the placement in force
+        at its start; at every boundary the fleet-level
+        :class:`~repro.fabric.global_scheduler.GlobalScheduler` sees what
+        the router could causally observe over the closing epoch (fleet
+        arrival rates, per-node dispatch rates, fluid backlogs) and may
+        answer with a bounded placement delta, which lands before the
+        next epoch routes.  Epoch membership is fixed by *client* arrival
+        time, snapshotted before dispatch shifts arrivals by network
+        delay.
+        """
+        from repro.fabric.global_scheduler import GlobalScheduler
+        cfg = self.cfg
+        # injection seam: tests/experiments may pre-set a (scripted)
+        # fleet controller; anything with on_epoch(...) and .events works
+        gs = self.global_scheduler
+        if gs is None:
+            gs = self.global_scheduler = GlobalScheduler(
+                self.profiles, self.nodes, cfg)
+        period = cfg.migration_period_ms
+        horizon = cfg.horizon_ms
+        n_epochs = max(1, int(np.ceil(horizon / period - 1e-9)))
+        # bucket by pristine client arrivals, before any network shifts
+        epoch_of = np.minimum(
+            (trace.arrival_ms // period).astype(np.int64), n_epochs - 1)
+        epoch_ids = [np.flatnonzero(epoch_of == k)
+                     for k in range(n_epochs)]
+        nm = len(trace.models)
+        pend_len = [len(n.pending_idx) for n in self.nodes]
+        for k in range(n_epochs):
+            t0 = k * period
+            for node in self.nodes:
+                node.prune_activations(t0)
+            ids = epoch_ids[k]
+            if len(ids):
+                self.router.dispatch(trace, ids)
+            if k == n_epochs - 1:
+                break             # no decision after the last epoch
+            t1 = (k + 1) * period
+            span_s = period / 1e3
+            counts = np.bincount(trace.model_id[ids], minlength=nm) \
+                if len(ids) else np.zeros(nm, dtype=np.int64)
+            demand = {trace.models[m]: c / span_s
+                      for m, c in enumerate(counts.tolist()) if c}
+            node_obs = []
+            for j, node in enumerate(self.nodes):
+                new = node.pending_idx[pend_len[j]:]
+                pend_len[j] = len(node.pending_idx)
+                if new:
+                    nc = np.bincount(
+                        trace.model_id[np.asarray(new, dtype=np.int64)],
+                        minlength=nm)
+                    node_obs.append({trace.models[m]: c / span_s
+                                     for m, c in enumerate(nc.tolist())
+                                     if c})
+                else:
+                    node_obs.append({})
+            # GlobalScheduler indexes node_obs/backlogs over *live* nodes
+            live_obs = [node_obs[j] for j, n in enumerate(self.nodes)
+                        if n.alive_at(t1)]
+            backlogs = self.router.backlogs(t1)
+            live_backlogs = [backlogs[j]
+                             for j, n in enumerate(self.nodes)
+                             if n.alive_at(t1)]
+            for u in gs.on_epoch(t1, demand, live_obs, live_backlogs,
+                                 horizon - t1):
+                self.nodes[u.node_id].apply_update(
+                    u.t_cut_ms, u.t_apply_ms, u.schedule, u.added,
+                    u.removed)
+        self.migration_events = list(gs.events)
+
+    def _run_donors(self, trace: RequestTrace) -> None:
+        """Run donor nodes first and hand their stranded requests back.
+
+        A donor (a node that stopped admitting a migrated-away model)
+        can close requests as conservation drops that the model's new
+        homes could still serve — so donors execute before the rest of
+        the fleet, earliest cut first, and their hand-backs re-dispatch
+        through the router (which only targets nodes that have not run).
+        A hand-back landing on a later donor simply chains: that donor
+        hands it back again after its own run.
+        """
+        donors = sorted((n for n in self.nodes
+                         if n.removed_models and not n.fails_in_run()),
+                        key=lambda n: (min(n.removed_models.values()),
+                                       n.node_id))
+        for node in donors:
+            node.run()
+            node.retired = True   # router must not target it again
+            for _model, release, lost in node.handback():
+                self._replay(trace, lost, release, self.cfg.handback_ms,
+                             handback=True)
 
     def _run_healthy(self, trace: RequestTrace) -> None:
         """Run every healthy node's engine, optionally in parallel.
@@ -256,7 +429,8 @@ class ServingFabric:
         which the parent scatters into the shared trace.  Results are
         bit-identical to the sequential order.
         """
-        ks = [k for k, n in enumerate(self.nodes) if not n.fails_in_run()]
+        ks = [k for k, n in enumerate(self.nodes)
+              if not n.fails_in_run() and not n.retired]
         w = min(self.cfg.node_workers, len(ks))
         if w > 1 and hasattr(os, "fork"):
             global _PAR_NODES

@@ -23,6 +23,7 @@ surviving nodes.
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping, Sequence
 
 import numpy as np
 
@@ -71,6 +72,15 @@ class FabricNode:
         self.n_servers = max(
             1, sum(1 for l in schedule.gpulets if not l.is_free))
         self.total_rate = sum(self.rate_by_model.values())
+        # ---- live-migration state (global rescheduling) ----
+        #: staged partition changes for this node's engine, in apply order
+        self.schedule_plan: list[tuple[float, ScheduleResult]] = []
+        #: model -> cut instant (ms) at which this node stopped admitting
+        #: it (the donor side of a migration)
+        self.removed_models: dict[str, float] = {}
+        #: model -> activation instant (ms): a freshly-migrated-in model
+        #: is routable only after its warm-up cut (the receiver side)
+        self.model_active_ms: dict[str, float] = {}
 
     @property
     def node_id(self) -> int:
@@ -90,8 +100,19 @@ class FabricNode:
         f = self.spec.fail_at_ms
         return f is not None and f < self.cfg.horizon_ms
 
-    def serves(self, model: str) -> bool:
-        return self.rate_by_model.get(model, 0.0) > 0.0
+    def serves(self, model: str, t_ms: float | None = None) -> bool:
+        """Is ``model`` routable here (at instant ``t_ms``)?
+
+        A migrated-in model only becomes routable at its warm-up cut;
+        until then the model's previous homes keep absorbing its traffic
+        (the receiver's engine is still loading weights).  Callers that
+        pass no instant (static fleets) see the plain provisioned check.
+        """
+        if self.rate_by_model.get(model, 0.0) <= 0.0:
+            return False
+        if t_ms is None or not self.model_active_ms:
+            return True
+        return t_ms >= self.model_active_ms.get(model, 0.0)
 
     def service_ms(self, model: str) -> float:
         """Per-request occupancy for the router's fluid backlog model.
@@ -105,6 +126,87 @@ class FabricNode:
             return 1e6  # not provisioned here: effectively infinite cost
         return self.n_servers * 1e3 / max(self.total_rate, 1e-9)
 
+    # ---- live migration (global rescheduling) ------------------------------
+
+    def apply_update(self, t_cut_ms: float, t_apply_ms: float,
+                     schedule: ScheduleResult,
+                     added: Mapping[str, float],
+                     removed: Sequence[str]) -> None:
+        """Accept one placement delta from the global rescheduler.
+
+        Router-visible signals flip at the cut (``t_cut_ms``): removed
+        models stop admitting immediately, added models are registered
+        but only become routable at ``t_apply_ms`` (the warm-up cut,
+        enforced by :meth:`serves`).  The node's engine picks the new
+        partitioning up via the staged :meth:`schedule_plan` when it
+        runs.
+
+        ``removed_models`` records ``t_apply_ms``, not the cut: the
+        engine only releases an evicted model's queue when the staged
+        partitioning installs, so that is the earliest instant a
+        hand-back can physically leave this node (on a receiver-donor
+        they differ by the warm-up charge; flooring replays at the cut
+        would let a hand-back be served elsewhere while simulated-time
+        it still sat here).
+        """
+        for m in removed:
+            self.removed_models[m] = t_apply_ms
+            self.model_active_ms.pop(m, None)
+        for m in added:
+            self.model_active_ms[m] = t_apply_ms
+            self.removed_models.pop(m, None)
+        self.schedule_plan.append((t_apply_ms, schedule))
+        self.rate_by_model = schedule.assignments_by_model()
+        self.n_servers = max(
+            1, sum(1 for l in schedule.gpulets if not l.is_free))
+        self.total_rate = sum(self.rate_by_model.values())
+
+    def prune_activations(self, t_ms: float) -> None:
+        """Forget warm-up gates that have passed (re-arms the router's
+        clear-time fast path once the fleet is homogeneous again)."""
+        if self.model_active_ms:
+            self.model_active_ms = {m: t for m, t in
+                                    self.model_active_ms.items()
+                                    if t > t_ms}
+
+    def handback(self) -> list[tuple[str, float, np.ndarray]]:
+        """Requests stranded by this node's migrations, reset for replay.
+
+        Only meaningful after :meth:`run` on a donor (a node with
+        ``removed_models``).  A stranded request is one for a migrated-
+        away model that was still queued at the cut: the engine carried
+        it into ``unrouted`` at the apply (the new partitioning has no
+        gpu-let for the model) and closed it as a conservation drop.
+        In-flight batches at the cut drained to completion (their stamps
+        stand), and requests the donor deliberately dropped for SLO
+        expiry stay dropped — the client already saw that rejection.
+
+        Returns ``(model, release_ms, global_indices)`` per migrated-
+        away model — ``release_ms`` the instant the donor's engine
+        actually let go of the queue (the staged apply) — with the
+        requests' completion/status reset, ready for a hand-back
+        dispatch to the model's new home.
+        """
+        if not self.removed_models or self.engine is None:
+            return []
+        own = self.engine._gidx
+        tr = self.trace
+        st = tr.status[own]
+        mid = tr.model_id[own]
+        out = []
+        for m, cut in sorted(self.removed_models.items()):
+            k = tr.model_index.get(m)
+            if k is None:
+                continue
+            lost = own[(st == UNSERVED) & (mid == k)]
+            if len(lost):
+                tr.completion_ms[lost] = np.nan
+                tr.status[lost] = PENDING
+                out.append((m, cut, lost))
+        return out
+
+    # ---- execution ---------------------------------------------------------
+
     def run(self) -> SimMetrics:
         """Run this node's engine over its dispatched index slice."""
         cfg = self.cfg
@@ -116,6 +218,8 @@ class FabricNode:
         self.engine = EventHeapEngine(self.profiles, cfg,
                                       schedule=self.schedule,
                                       on_tick=self.on_tick)
+        for t_apply, sched in self.schedule_plan:
+            self.engine.apply_schedule_at(t_apply, sched)
         self.engine.submit_trace(
             self.trace, np.asarray(self.pending_idx, dtype=np.int64))
         self.metrics = self.engine.run()

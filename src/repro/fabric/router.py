@@ -51,6 +51,20 @@ another.  A 64-node, 5M-request dispatch pass runs in seconds.  Exotic
 shapes (per-model candidate subsets, heterogeneous drains, scheduled
 failures, the other two policies) take the generic loop, which preserves
 the object path's arithmetic op-for-op.
+
+Time-varying placement (live migration)
+---------------------------------------
+Under the fabric's global rescheduler, placement is *state that changes
+over simulated time*: the fabric dispatches epoch by epoch, and between
+calls a node's ``rate_by_model`` may gain or lose models.  The fluid
+view composes across calls (each pass resumes from the synced
+backlog/clock), so the clear-time heap stays valid per epoch — it
+re-validates its preconditions on every ``dispatch`` and re-arms once
+warm-up gates expire and the fleet is homogeneous again.  Candidacy is
+instant-aware: ``node.serves(model, t)`` keeps a migrated-in model
+un-routable until its warm-up cut, and the affinity policy's rendezvous
+order re-resolves over the live candidate set, so sticky sessions
+follow the model to its new home.
 """
 from __future__ import annotations
 
@@ -80,6 +94,8 @@ class DispatchStats:
     #: apart from ``shed`` because gold is never *deliberately* dropped
     lost: dict[int, int] = dataclasses.field(default_factory=dict)
     failed_over: int = 0
+    #: requests re-dispatched after a migration stranded them on a donor
+    handed_back: int = 0
 
     def count(self, d: dict[int, int], key: int) -> None:
         d[key] = d.get(key, 0) + 1
@@ -149,8 +165,22 @@ class FabricRouter:
 
     # ---- dispatch entry ---------------------------------------------------
 
+    def backlogs(self, t_ms: float) -> list[float]:
+        """Per-node fluid backlog (ms of queued work), drained to ``t_ms``.
+
+        The global rescheduler's load signal: the same honestly-ignorant
+        fluid view the dispatch policies use, snapshotted at an epoch
+        boundary.  Draining is idempotent with the dispatch passes (a
+        node's clear time is invariant under it), so reading the signal
+        does not perturb routing.
+        """
+        for ld in self._loads:
+            ld.drain_to(t_ms)
+        return [ld.backlog_ms for ld in self._loads]
+
     def dispatch(self, trace: RequestTrace, ids: np.ndarray | None = None,
-                 failover: bool = False) -> DispatchStats:
+                 failover: bool = False,
+                 handback: bool = False) -> DispatchStats:
         """Assign each indexed request to a node (SoA hand-off).
 
         Appends each routed request's *global index* to its node's
@@ -167,6 +197,10 @@ class FabricRouter:
         could never have had at the replay instant, the view restarts
         from zero at the first replay time: replays spread by the
         policy's static signals plus the backlog they themselves build.
+
+        ``handback=True`` marks a migration hand-back replay — same
+        stale-view reset as failover, accounted under
+        ``stats.handed_back`` instead of ``failed_over``.
         """
         if ids is None:
             ids = np.arange(len(trace), dtype=np.int64)
@@ -175,14 +209,20 @@ class FabricRouter:
         if not len(ids):
             return self.stats
         order = ids[np.argsort(trace.arrival_ms[ids], kind="stable")]
-        if failover:
+        replay = failover or handback
+        if replay:
             t0 = float(trace.arrival_ms[order[0]])
             for ld in self._loads:
                 ld.reset(t0)
+        fo_before = self.stats.failed_over
         if self._fast_path_ok(trace):
-            self._dispatch_least_loaded(trace, order, failover)
+            self._dispatch_least_loaded(trace, order, replay)
         else:
-            self._dispatch_generic(trace, order, failover)
+            self._dispatch_generic(trace, order, replay)
+        if handback:
+            # the inner loops count replays as failed_over; reclassify
+            self.stats.handed_back += self.stats.failed_over - fo_before
+            self.stats.failed_over = fo_before
         return self.stats
 
     # ---- least-loaded clear-time fast path --------------------------------
@@ -204,6 +244,13 @@ class FabricRouter:
             n = ld.node
             if n.retired or n.spec.fail_at_ms is not None \
                     or n.n_servers != s0 or n.node_id != i:
+                return False
+            if n.model_active_ms:
+                # a migrated-in model is still inside its warm-up window:
+                # candidacy varies *within* this pass, which the single
+                # clear-time-per-node collapse cannot represent.  The
+                # fabric prunes expired gates at each epoch boundary, so
+                # the heap path re-arms once the fleet is homogeneous.
                 return False
             rbm = n.rate_by_model
             for m in trace.models:
@@ -318,7 +365,7 @@ class FabricRouter:
 
     def _candidates(self, model: str, t_ms: float) -> list[_NodeLoad]:
         cands = [ld for ld in self._loads
-                 if ld.node.alive_at(t_ms) and ld.node.serves(model)]
+                 if ld.node.alive_at(t_ms) and ld.node.serves(model, t_ms)]
         if not cands:  # nobody provisioned for the model: any live node
             cands = [ld for ld in self._loads if ld.node.alive_at(t_ms)]
         return cands

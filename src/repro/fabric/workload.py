@@ -35,16 +35,25 @@ def build_trace_soa(scn: FabricScenario,
     gen = PoissonArrivals(seed=seed)
     horizon_ms = horizon_s * 1e3
     streams = []
-    for m, r in sorted(scn.rates.items()):
-        if r <= 0 or m not in profiles:
+    # drift scenarios may introduce models whose t=0 rate is zero, so the
+    # vocabulary is the union over phases, not just ``scn.rates``
+    names = (scn.models() if scn.rate_phases is not None
+             else sorted(scn.rates))
+    for m in names:
+        if m not in profiles:
             continue
         slo = profiles[m].slo_ms
-        if scn.hotspot is not None and m in scn.hot_models:
+        if scn.varies(m):
             fn = scn.rate_fn(m)
+            peak = scn.peak_rate(m)
+            if peak <= 0:
+                continue
             times = gen.time_varying_times(
-                lambda t, fn=fn: fn(t / 1e3), scn.peak_rate(m) + 1e-9,
-                horizon_ms)
+                lambda t, fn=fn: fn(t / 1e3), peak + 1e-9, horizon_ms)
         else:
+            r = scn.rates.get(m, 0.0)
+            if r <= 0:
+                continue
             times = gen.constant_times(r, horizon_ms)
         streams.append((m, times, slo))
     trace = RequestTrace.from_streams(streams)
@@ -77,4 +86,5 @@ def build_fabric(scn: FabricScenario,
     return ServingFabric.build(
         profiles, scn.n_nodes, scn.rates, cfg=cfg,
         fail_at_ms={i: t * 1e3 for i, t in scn.fail_at_s},
-        affinity_weights=weights, **build_kwargs)
+        affinity_weights=weights, placement=scn.placement,
+        **build_kwargs)

@@ -65,6 +65,31 @@ class EWMARateTracker:
         return dict(self.rates)
 
 
+def predict_target(ewma: Mapping[str, float],
+                   observed: Mapping[str, float],
+                   prev_obs: Mapping[str, float],
+                   margin: float = 1.05,
+                   trend_windows: float = 1.5) -> dict[str, float]:
+    """Predicted next-window peak rates, with safety margin.
+
+    Rising load: extrapolate the last observation by ``trend_windows``
+    windows of its trend (the observation is the *average* over a window;
+    the schedule must cover the *end* of the next one).  Falling/steady
+    load: the EWMA floor prevents thrash on window noise.
+
+    Shared by the per-node :class:`ServingController` and the fabric's
+    fleet-level :class:`~repro.fabric.global_scheduler.GlobalScheduler` —
+    both subscribe to periodic ticks (engine TICKs / fabric epochs) and
+    need the same causal rate forecast.
+    """
+    out = {}
+    for m, r in ewma.items():
+        obs = observed.get(m, r)
+        trend = max(0.0, obs - prev_obs.get(m, obs))
+        out[m] = max(r, obs + trend_windows * trend) * margin
+    return {m: r for m, r in out.items() if r > 0}
+
+
 @dataclasses.dataclass
 class PeriodRecord:
     t_start_s: float
@@ -112,19 +137,9 @@ class ServingController:
 
     def _target(self, ewma: Mapping[str, float],
                 observed: Mapping[str, float]) -> dict[str, float]:
-        """Predicted next-window peak rates, with safety margin.
-
-        Rising load: extrapolate the last observation by 1.5 windows of its
-        trend (the observation is the *average* over a window; the schedule
-        must cover the *end* of the next one).  Falling/steady load: the
-        EWMA floor prevents thrash on window noise.
-        """
-        out = {}
-        for m, r in ewma.items():
-            obs = observed.get(m, r)
-            trend = max(0.0, obs - self._prev_obs.get(m, obs))
-            out[m] = max(r, obs + 1.5 * trend) * self._margin
-        return {m: r for m, r in out.items() if r > 0}
+        """See :func:`predict_target` (the shared forecast core)."""
+        return predict_target(ewma, observed, self._prev_obs,
+                              margin=self._margin)
 
     def _reschedule(self, ewma: Mapping[str, float],
                     observed: Mapping[str, float]) -> ScheduleResult | None:

@@ -239,6 +239,9 @@ class EventHeapEngine:
         self.epoch = 0
         self.paused = False
         self._pending_schedule: ScheduleResult | None = None
+        #: pre-planned partition changes (fabric migration cuts): APPLY
+        #: events carry 1-based indices into this list
+        self._apply_plan: list[ScheduleResult] = []
         self.schedule: ScheduleResult | None = None
         self.lets: list[_LetRt] = []
         #: model id -> [let_idx, rate, wrr_credit] targets (live schedule)
@@ -799,6 +802,29 @@ class EventHeapEngine:
             self.paused = True
         self._push(self.now + delay, APPLY)
 
+    def apply_schedule_at(self, t_ms: float, result: ScheduleResult) -> None:
+        """Plan a partitioning change at an absolute instant (pre-run).
+
+        The fabric's global rescheduler uses this to stage a node's
+        migration cuts before the engine runs: each planned schedule goes
+        live at exactly ``t_ms`` (the receiver's warm-up charge is folded
+        into ``t_ms`` by the caller).  Unlike :meth:`apply_schedule`, any
+        number of changes can be staged, and they do not consume the
+        single ``_pending_schedule`` reorg slot.  Staged applies and a
+        live tick-driven controller are not reconciled against each
+        other (last install wins, and a staged apply does not honor a
+        reorg blackout's pause) — the fabric refuses that combination.
+
+        In-flight batches at a cut drain exactly like a reorganization:
+        ``_install`` bumps the epoch so their COMPLETE events go stale,
+        while their completions (stamped at launch) stand.  Queued
+        requests carry onto the new partitioning; requests for a model
+        the new partitioning no longer serves park in ``unrouted`` and
+        surface as conservation drops the fabric can hand back.
+        """
+        self._apply_plan.append(result)
+        self._push(t_ms, APPLY, len(self._apply_plan))
+
     def _handle_tick(self, t: float) -> None:
         obs = self._flush_window(t)
         result = self.on_tick(t, obs, self) if self.on_tick else None
@@ -907,7 +933,12 @@ class EventHeapEngine:
                 if rt.inflight is None and not self.paused:
                     self._walk(rt)
             elif kind == APPLY:
-                if self._pending_schedule is not None:
+                if ev[3]:
+                    # staged migration cut (apply_schedule_at)
+                    self._install(self._apply_plan[ev[3] - 1])
+                    if self._log_on:
+                        self.log.append(("apply", t))
+                elif self._pending_schedule is not None:
                     self._install(self._pending_schedule)
                     self._pending_schedule = None
                     if self._log_on:

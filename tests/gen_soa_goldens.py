@@ -1,13 +1,16 @@
 """Regenerate tests/goldens/soa_metrics.json from the scenarios.
 
-Run from the repo root::
+Run from anywhere (no PYTHONPATH needed — the script resolves its own
+repo paths)::
 
-    PYTHONPATH=src:tests python tests/gen_soa_goldens.py
+    python tests/gen_soa_goldens.py
 
-The committed golden file was generated at the PR-3 tip (the last commit
-with the object-based hot path), so it pins pre-refactor serving
-semantics.  Only regenerate it if a PR *deliberately* changes serving
-behavior — and say so in the PR description.
+The pre-PR-5 records were generated at the PR-3 tip (the last commit
+with the object-based hot path), so they pin pre-refactor serving
+semantics; the ``fabric-mig-*`` records pin the PR-5 migration protocol.
+Only regenerate if a PR *deliberately* changes serving behavior — and
+say so in the PR description.  Adding scenarios must leave every
+existing record byte-identical (``git diff`` the golden after a regen).
 """
 from __future__ import annotations
 
@@ -15,13 +18,18 @@ import json
 import os
 import sys
 
-sys.path.insert(0, os.path.dirname(__file__))
+_HERE = os.path.abspath(os.path.dirname(__file__))
+# runnable from any CWD: the scenarios module lives next to this script,
+# and the package under ../src (prepended, so a stale installed copy of
+# ``repro`` never shadows the working tree)
+sys.path.insert(0, os.path.normpath(os.path.join(_HERE, "..", "src")))
+sys.path.insert(0, _HERE)
 
 from soa_scenarios import (ENGINE_SCENARIOS, FABRIC_SCENARIOS,  # noqa: E402
                            fabric_record, metrics_record,
                            run_engine_scenario, run_fabric_scenario)
 
-OUT = os.path.join(os.path.dirname(__file__), "goldens", "soa_metrics.json")
+OUT = os.path.join(_HERE, "goldens", "soa_metrics.json")
 
 
 def main() -> int:

@@ -1,0 +1,353 @@
+"""Migration-safety suite: the fabric's live model migration (ISSUE 5).
+
+The load-bearing invariants of fleet-level global rescheduling:
+
+  * **Conservation across epochs** — every request ends in exactly one
+    terminal status, and no request is double-served: a request index
+    appears in node dispatch slices exactly once unless it was
+    explicitly reset and replayed (casualty or hand-back), and only one
+    completion stamp survives.
+  * **Migrations off == PR-4** — with the migration knobs present but
+    disabled, per-request metrics are byte-identical to the pre-PR-5
+    goldens (``tests/goldens/soa_metrics.json``, reused, not
+    regenerated).
+  * **Priority + fence invariants survive migrations** — violation rates
+    stay monotone in class level, and a donor never launches a
+    migrated-away model after its cut applies (in-flight batches drain,
+    queued requests hand back instead of vanishing).
+  * **Determinism** — identical seeds give identical migration decisions
+    and metrics, sequential or forked node workers.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from soa_scenarios import _fabric_cases, fabric_record, fingerprint
+from repro.core import ElasticPartitioning, calibrate_profiles
+from repro.core.scenarios import (FabricScenario, drift_failure_scenario,
+                                  drifting_zipf_scenario,
+                                  hotspot_migration_scenario,
+                                  partition_placement, zipf_model_rates)
+from repro.fabric import (FabricConfig, NodeUpdate, build_fabric,
+                          build_trace, build_trace_soa)
+from repro.simulator.trace import COMPLETED, PENDING, RequestTrace
+
+PROFS = calibrate_profiles()
+
+GOLDENS = json.load(open(os.path.join(
+    os.path.dirname(__file__), "goldens", "soa_metrics.json")))
+
+
+def _mig_cfg(**kw) -> FabricConfig:
+    base = dict(preemption=True, migrations=True,
+                migration_period_ms=2_000.0, max_migrations_per_epoch=3)
+    base.update(kw)
+    return FabricConfig(**base)
+
+
+def _audit_single_serve(fabric, trace: RequestTrace) -> None:
+    """No request is double-served: dispatch-slice multiset audit.
+
+    Each index may appear across node slices at most ``1 + r`` times,
+    where ``r`` counts its explicit reset-and-replay passes (casualties
+    and hand-backs, recorded in ``fabric.replayed_ids``); a never-
+    replayed request that reached a node appears exactly once.  And a
+    completion stamp exists iff the request's terminal status says so.
+    """
+    n = len(trace)
+    counts = np.zeros(n, dtype=np.int64)
+    for node in fabric.nodes:
+        if node.pending_idx:
+            np.add.at(counts, np.asarray(node.pending_idx,
+                                         dtype=np.int64), 1)
+    replays = np.zeros(n, dtype=np.int64)
+    for ids in fabric.replayed_ids:
+        np.add.at(replays, ids, 1)
+    assert np.all(counts <= 1 + replays), "an index was dispatched " \
+        "more often than its replay count allows (double-serve)"
+    from repro.simulator.trace import DROPPED, LOST, SHED, UNSERVED
+    st_arr = trace.status
+    never = replays == 0
+    on_node = (st_arr == COMPLETED) | (st_arr == UNSERVED)
+    assert np.all(counts[never & on_node] == 1)
+    assert np.all(counts[never & ((st_arr == SHED) | (st_arr == LOST))]
+                  == 0)
+    assert np.all(counts[never & (st_arr == DROPPED)] <= 1)
+    comp = st_arr == COMPLETED
+    assert np.all(np.isfinite(trace.completion_ms[comp]))
+    assert np.all(np.isnan(trace.completion_ms[~comp]))
+
+
+# ---------------------------------------------------------------------------
+# conservation across migration epochs (Hypothesis over random fleets)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_nodes=st.sampled_from([2, 3, 4]),
+       skew=st.sampled_from([1.4, 2.0, 2.4]),
+       period=st.sampled_from([1_500.0, 2_500.0]),
+       preemption=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_conservation_across_migration_epochs(seed, n_nodes, skew, period,
+                                              preemption):
+    """Seeded random drift fleets: one terminal status each, no double-
+    serve, totals add up — with migrations actively reshaping placement."""
+    horizon_s = 12.0
+    scn = drifting_zipf_scenario(n_nodes, horizon_s=horizon_s, n_phases=3,
+                                 skew=skew, util=1.0)
+    cfg = _mig_cfg(horizon_ms=horizon_s * 1e3, preemption=preemption,
+                   migration_period_ms=period,
+                   migration_warmup_jitter_ms=60.0, migration_seed=seed)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.total == len(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+
+
+def test_conservation_with_handback_under_backlog():
+    """A donor evicting a *backlogged* model hands its queue to the new
+    home: requests complete there (or drop honestly), none vanish.
+
+    Built with a scripted fleet controller so the eviction provably
+    lands while the donor holds a deep queue — the organically-tuned
+    controller avoids exactly this, which would leave the hand-back path
+    untested.
+    """
+    # vgg demand far past the donor's partition *and* its burst-batch
+    # ceiling, so a deep queue provably exists at the cut.  The
+    # receiver's warm-up completes exactly at the cut (t_apply == t_cut):
+    # vgg's SLO is shorter than any realistic warm-up, so hand-backs
+    # landing mid-warm-up would all expire — correct, but it would make
+    # the served-by-new-home half of this test vacuous.
+    rates = {"vgg": 500.0, "le": 50.0, "goo": 60.0}
+    placement = ({"vgg": 30.0, "le": 50.0}, {"goo": 60.0})
+    scn = FabricScenario(name="handback", n_nodes=2, rates=rates,
+                         placement=placement)
+    horizon_ms = 8_000.0
+    cfg = _mig_cfg(horizon_ms=horizon_ms)
+    fabric = build_fabric(scn, PROFS, cfg)
+
+    sched = ElasticPartitioning(PROFS)
+    cut = 4_000.0
+    upd_donor = NodeUpdate(
+        node_id=0, t_cut_ms=cut, t_apply_ms=cut,
+        rates={"le": 50.0}, schedule=sched.schedule({"le": 50.0}),
+        added={}, removed=("vgg",))
+    recv_rates = {"goo": 60.0, "vgg": 500.0}
+    upd_recv = NodeUpdate(
+        node_id=1, t_cut_ms=cut, t_apply_ms=cut,
+        rates=recv_rates, schedule=sched.schedule(recv_rates),
+        added={"vgg": 500.0}, removed=())
+
+    class _Scripted:
+        def __init__(self):
+            self.events = []
+
+        def on_epoch(self, t_ms, demand, node_obs, backlogs,
+                     remaining_ms):
+            if t_ms == cut:
+                out = [upd_donor, upd_recv]
+                self.events.extend(u.event() for u in out)
+                return out
+            return []
+
+    fabric.global_scheduler = _Scripted()
+    trace = build_trace_soa(scn, PROFS, horizon_ms / 1e3, seed=3)
+    fm = fabric.serve_trace(trace)
+
+    assert fm.stats.handed_back > 0, \
+        "the overloaded donor must strand queued vgg at the cut"
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+    # the handed-back requests really moved: every replayed id landed in
+    # the receiver's slice (node 0 is retired by then)
+    replayed = np.concatenate(fabric.replayed_ids)
+    recv_idx = set(fabric.nodes[1].pending_idx)
+    assert set(replayed.tolist()) <= recv_idx
+    # and some of them were actually served by the new home
+    assert (trace.status[replayed] == COMPLETED).any()
+
+
+# ---------------------------------------------------------------------------
+# migrations disabled == PR-4 goldens (reused, not regenerated)
+# ---------------------------------------------------------------------------
+
+def test_migration_knobs_off_reproduce_pr4_goldens():
+    """Carrying migration knobs in the config changes nothing while
+    ``migrations=False``: the PR-4 SoA goldens replay byte-identically."""
+    for name in ("fabric-4n", "fabric-faildrain", "fabric-hotspot-shed"):
+        scn, cfg, horizon_s, seed = _fabric_cases()[name]
+        cfg = dataclasses.replace(
+            cfg, migrations=False, migration_period_ms=777.0,
+            max_migrations_per_epoch=5, migration_warmup_ms=123.0,
+            migration_warmup_jitter_ms=45.0, handback_ms=9.0)
+        fabric = build_fabric(scn, PROFS, cfg)
+        reqs = build_trace(scn, PROFS, horizon_s, seed=seed)
+        fm = fabric.serve(reqs)
+        rec = fabric_record(reqs, fm)
+        assert rec == GOLDENS[name], f"{name} diverged with knobs present"
+
+
+# ---------------------------------------------------------------------------
+# priority + generation-fence invariants with migrations on
+# ---------------------------------------------------------------------------
+
+def test_no_priority_inversion_with_migrations():
+    """Class violation rates stay monotone while placement moves."""
+    scn = drifting_zipf_scenario(4, horizon_s=20.0, n_phases=2,
+                                 skew=2.4, util=1.1)
+    cfg = _mig_cfg(horizon_ms=20_000.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, 20.0, seed=11)
+    fm = fabric.serve_trace(trace)
+    assert fm.migrations > 0, "drift this hard must trigger migrations"
+    pc = fm.fleet.per_class
+    assert set(pc) == {0, 1, 2}
+    rates = [pc[k]["violations"] / pc[k]["total"] for k in (0, 1, 2)]
+    assert rates[0] <= rates[1] + 1e-9
+    assert rates[1] <= rates[2] + 1e-9
+    assert rates[2] > 0.0, "vacuous unless the drift hurt someone"
+
+
+def test_donor_stops_launching_after_cut_and_drains_inflight():
+    """Admit-stop + drain-to-cut, observed in the donor's event log:
+    after a removal's apply instant the donor never launches another
+    batch of that model (the generation fence retired its walkers), but
+    a batch in flight at the cut keeps its completion stamps."""
+    scn = drifting_zipf_scenario(4, horizon_s=20.0, n_phases=2,
+                                 skew=2.4, util=1.1)
+    cfg = _mig_cfg(horizon_ms=20_000.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, 20.0, seed=11)
+    fm = fabric.serve_trace(trace)
+    removals = [e for e in fm.migration_events if e.removed]
+    assert removals, "this drift must evict at least one model instance"
+    for e in removals:
+        node = fabric.nodes[e.node_id]
+        assert node.engine is not None
+        for m in e.removed:
+            launches = [ev for ev in node.engine.log
+                        if ev[0] == "batch" and ev[5] == m]
+            assert all(ev[3] < e.t_apply_ms + 1e-9 for ev in launches), \
+                f"node {e.node_id} launched {m} after its cut applied"
+        # the apply really happened inside this engine run
+        assert any(ev[0] == "apply" and
+                   abs(ev[1] - e.t_apply_ms) < 1e-6
+                   for ev in node.engine.log)
+
+
+# ---------------------------------------------------------------------------
+# determinism: decisions and metrics, sequential vs forked workers
+# ---------------------------------------------------------------------------
+
+def _run_drift(node_workers: int, seed: int):
+    scn = drifting_zipf_scenario(3, horizon_s=14.0, n_phases=2,
+                                 skew=2.0, util=1.0)
+    cfg = _mig_cfg(horizon_ms=14_000.0, node_workers=node_workers,
+                   migration_warmup_jitter_ms=70.0, migration_seed=5)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, 14.0, seed=seed)
+    fm = fabric.serve_trace(trace)
+    return (fingerprint(trace.views()), fm.migration_events,
+            fm.fleet.per_class, fm.stats.handed_back,
+            fm.stats.dispatched)
+
+
+def test_identical_seeds_identical_migrations_and_metrics():
+    """Same seed twice -> same decisions (incl. the seeded warm-up
+    jitter) and byte-identical per-request outcomes."""
+    assert _run_drift(1, seed=23) == _run_drift(1, seed=23)
+
+
+def test_migration_decisions_identical_sequential_vs_forked():
+    """FabricConfig.node_workers must not leak into decisions or
+    metrics: all migration choices happen in the dispatch loop, before
+    any engine (worker) runs."""
+    assert _run_drift(1, seed=23) == _run_drift(2, seed=23)
+
+
+# ---------------------------------------------------------------------------
+# scenario/plumbing sanity for the new generators
+# ---------------------------------------------------------------------------
+
+def test_partition_placement_covers_rates():
+    rates = zipf_model_rates(("le", "goo", "res", "ssd", "vgg"),
+                             total_load=3.0, skew=2.0)
+    placement = partition_placement(rates, 4)
+    for m, r in rates.items():
+        got = sum(p.get(m, 0.0) for p in placement)
+        assert abs(got - r) < 1e-6 * max(r, 1.0)
+    # cold models are concentrated: at least one model has a single home
+    homes = {m: sum(1 for p in placement if m in p) for m in rates}
+    assert min(homes.values()) == 1
+
+
+def test_drift_scenario_trace_follows_phases():
+    scn = drifting_zipf_scenario(2, horizon_s=12.0, n_phases=2, skew=2.0,
+                                 util=0.8)
+    trace = build_trace_soa(scn, PROFS, 12.0, seed=2)
+    # "hot" is measured in node-capacity load, not raw req/s (a cheap
+    # model can lead in req/s without being the capacity hog)
+    from repro.core.scenarios import unit_load
+    hot0 = max(scn.rates, key=lambda m: unit_load(m, scn.rates[m]))
+    seg1 = scn.rate_phases[0][1]
+    hot1 = max(seg1, key=lambda m: unit_load(m, seg1[m]))
+    assert hot0 != hot1
+    mid0 = trace.model_index[hot0]
+    mid1 = trace.model_index[hot1]
+    first = trace.arrival_ms < 6_000.0
+    n0a = int(((trace.model_id == mid0) & first).sum())
+    n0b = int(((trace.model_id == mid0) & ~first).sum())
+    n1a = int(((trace.model_id == mid1) & first).sum())
+    n1b = int(((trace.model_id == mid1) & ~first).sum())
+    assert n0a > 3 * n0b, "old hot model must cool down in phase 1"
+    assert n1b > 3 * n1a, "new hot model must heat up in phase 1"
+
+
+def test_failed_donor_mid_migration_conserves():
+    """Donor-fails-mid-migration: the failure-drain path and the
+    migration machinery compose without losing requests."""
+    scn = drift_failure_scenario(3, fail_node=0, fail_at_s=8.0,
+                                 horizon_s=16.0, skew=2.4, util=1.0)
+    cfg = _mig_cfg(horizon_ms=16_000.0, failover_ms=15.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, 16.0, seed=13)
+    fm = fabric.serve_trace(trace)
+    assert fabric.nodes[0].retired
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+
+
+def test_migrations_refuse_per_node_controllers():
+    """A per-node controller would reschedule a migrated-in model away
+    (it only sees its own observed rates): the combination is refused
+    outright rather than half-working."""
+    import pytest
+    scn = drifting_zipf_scenario(2, horizon_s=8.0)
+    cfg = _mig_cfg(horizon_ms=8_000.0, period_s=2.0)
+    with pytest.raises(ValueError, match="cannot be combined"):
+        build_fabric(scn, PROFS, cfg)
+
+
+def test_rate_phases_and_hotspot_refuse_to_combine():
+    import pytest
+    with pytest.raises(ValueError, match="rate_phases and hotspot"):
+        FabricScenario(name="bad", n_nodes=2, rates={"goo": 50.0},
+                       rate_phases=((4.0, {"goo": 100.0}),),
+                       hotspot=(1.0, 3.0, 2.0), hot_models=("goo",))
+
+
+def test_hotspot_migration_scenario_targets_coldest_model():
+    scn = hotspot_migration_scenario(3)
+    assert len(scn.hot_models) == 1
+    hot = scn.hot_models[0]
+    homes = sum(1 for p in scn.placement if hot in p)
+    assert homes == 1, "the flash crowd must hit a single-home model"
