@@ -181,6 +181,23 @@ def main() -> int:
         print("SMOKE FAIL: migration serving path over wall-clock "
               "budget (or conservation broken)")
         return 1
+    # the DAG release-frontier loop rides the same wall budget too: the
+    # per-epoch frontier scans + incremental engine segments (hundreds of
+    # run_until slices per node) must not dominate the serving hot path.
+    from benchmarks.fig_dag import run_point as dag_point
+    t0 = time.perf_counter()
+    p = dag_point(3, horizon_s=8.0)
+    dag_wall = time.perf_counter() - t0
+    d = p["aware"]
+    ok = dag_wall <= args.budget_s and d["conserved"] \
+        and p["oblivious"]["conserved"]
+    print(f"engine-smoke-dag requests={d['requests']} jobs={d['jobs']} "
+          f"wall={dag_wall:.2f}s budget={args.budget_s:.0f}s "
+          f"conserved={d['conserved']} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        print("SMOKE FAIL: DAG serving path over wall-clock budget "
+              "(or conservation broken)")
+        return 1
     return 0
 
 

@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig15_ideal_comparison",
     "benchmarks.fig_fabric_scaling",
     "benchmarks.fig_migration",
+    "benchmarks.fig_dag",
     "benchmarks.bench_engine",
     "benchmarks.kernels_bench",
     "benchmarks.ablations",

@@ -392,6 +392,207 @@ def drift_failure_scenario(n_nodes: int,
         fail_at_s=((fail_node, fail_at_s),))
 
 
+# ---------------------------------------------------------------------------
+# compound-inference (DAG) scenarios (ROADMAP "requests as model DAGs"):
+# a client request is a task graph over several models with ONE end-to-end
+# SLO — e.g. frontend -> detector -> per-region classifier fan-out ->
+# fusion.  Pure descriptions again: repro.fabric.workload materializes
+# them into staged RequestTraces (RequestTrace.attach_stages).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DagTemplate:
+    """One job shape: a small model DAG every job of this type instances.
+
+    ``stage_models[i]`` is stage ``i``'s model; ``parents[i]`` lists its
+    parent stage ids.  Stages are numbered in topological order and each
+    stage's parents must be *consecutive* ids — the trace encodes a
+    stage's fan-in as one contiguous row range (first parent + count),
+    and laying template stages out in this shape makes every job's
+    parent ranges contiguous by construction.  Chains, fan-outs, and
+    fan-ins all fit; an arbitrary DAG may need duplicate stages.
+
+    ``slo_scale`` sizes the end-to-end job SLO as a multiple of the
+    critical-path sum of the stage models' standalone SLOs (see
+    :func:`critical_path_budgets`): 1.0 leaves zero slack for queueing,
+    network hops, and release-frontier staleness; the defaults leave a
+    realistic margin.
+    """
+
+    name: str
+    stage_models: tuple[str, ...]
+    parents: tuple[tuple[int, ...], ...]
+    slo_scale: float = 1.25
+
+    def __post_init__(self):
+        if len(self.parents) != len(self.stage_models):
+            raise ValueError("parents and stage_models length mismatch")
+        if not self.stage_models:
+            raise ValueError("a template needs at least one stage")
+        for i, ps in enumerate(self.parents):
+            if any(p < 0 or p >= i for p in ps):
+                raise ValueError(
+                    f"stage {i}: parents must be earlier stage ids")
+            if ps and list(ps) != list(range(ps[0], ps[0] + len(ps))):
+                raise ValueError(
+                    f"stage {i}: parent ids must be consecutive")
+        if self.parents[0] != ():
+            raise ValueError("stage 0 must be a root")
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_models)
+
+    def first_parent(self, i: int) -> int:
+        return self.parents[i][0] if self.parents[i] else -1
+
+
+def critical_path_budgets(template: DagTemplate,
+                          weights: dict[str, float]
+                          ) -> tuple[float, tuple[float, ...]]:
+    """Decompose one end-to-end job SLO into per-stage budgets.
+
+    ``weights[m]`` is stage weight (the model's standalone SLO is the
+    natural choice: it already encodes relative service demand).  The
+    job SLO is ``slo_scale`` times the critical-path weight sum, and
+    stage ``i`` gets ``job_slo * w_i / path_through(i)`` where
+    ``path_through(i)`` is the heaviest root→leaf path containing ``i``
+    — so budgets along the critical path sum *exactly* to the job SLO
+    (each critical stage gets ``slo_scale * w_i``), and off-critical
+    stages get proportionally more slack.
+    """
+    ms, ps = template.stage_models, template.parents
+    n = len(ms)
+    w = [float(weights[m]) for m in ms]
+    to = [0.0] * n          # heaviest path ending at i (inclusive)
+    for i in range(n):
+        to[i] = w[i] + max((to[p] for p in ps[i]), default=0.0)
+    children: list[list[int]] = [[] for _ in range(n)]
+    for i, pp in enumerate(ps):
+        for p in pp:
+            children[p].append(i)
+    frm = [0.0] * n         # heaviest path starting at i (inclusive)
+    for i in range(n - 1, -1, -1):
+        frm[i] = w[i] + max((frm[c] for c in children[i]), default=0.0)
+    cpl = max(to)
+    job_slo = template.slo_scale * cpl
+    budgets = tuple(job_slo * w[i] / (to[i] + frm[i] - w[i])
+                    for i in range(n))
+    return job_slo, budgets
+
+
+def chain_template(models: tuple[str, ...] = ("le", "ssd", "goo"),
+                   slo_scale: float = 1.25,
+                   name: str | None = None) -> DagTemplate:
+    """A linear pipeline: every stage feeds the next."""
+    parents = ((),) + tuple((i,) for i in range(len(models) - 1))
+    return DagTemplate(name or "chain-" + "-".join(models),
+                       tuple(models), parents, slo_scale)
+
+
+def fanout_fanin_template(pre: tuple[str, ...] = ("le", "ssd"),
+                          branch: str = "goo", n_branches: int = 3,
+                          post: str = "le",
+                          slo_scale: float = 1.25,
+                          name: str | None = None) -> DagTemplate:
+    """Frontend chain -> detector fan-out -> fusion fan-in.
+
+    ``pre`` is a chain (frontend, detector); the last pre stage fans out
+    to ``n_branches`` parallel ``branch`` classifiers (per-region crops),
+    which a single ``post`` fusion stage joins.
+    """
+    if n_branches < 1:
+        raise ValueError("need at least one branch")
+    models = tuple(pre) + (branch,) * n_branches + (post,)
+    parents: list[tuple[int, ...]] = [()]
+    parents += [(i,) for i in range(len(pre) - 1)]
+    fan_src = len(pre) - 1
+    parents += [(fan_src,)] * n_branches
+    parents.append(tuple(range(len(pre), len(pre) + n_branches)))
+    return DagTemplate(
+        name or f"fanout-{branch}x{n_branches}", models, tuple(parents),
+        slo_scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class DagScenario:
+    """One compound-inference experiment: DAG jobs + background singles.
+
+    ``dag_rates`` maps templates to fleet-total *job* arrival rates
+    (jobs/s); every stage of a template sees the full job rate.
+    ``background`` adds plain single-model traffic (fleet-total req/s) —
+    the mixed-traffic case where stage rows and classic rows share one
+    trace and one fleet.  Priorities are drawn per *job* (a job's stages
+    share one class: shedding a silver stage kills a silver job, not a
+    random stage of a gold one) and per background request.
+    """
+
+    name: str
+    n_nodes: int
+    dag_rates: tuple[tuple[DagTemplate, float], ...]
+    background: dict[str, float] = dataclasses.field(default_factory=dict)
+    priority_mix: tuple[tuple[int, float], ...] = ((0, 1.0),)
+
+    def fleet_rates(self) -> dict[str, float]:
+        """Per-model fleet req/s incl. stage multiplicities (for
+        provisioning: ElasticPartitioning sees the model streams DAG
+        traffic actually generates)."""
+        out = dict(self.background)
+        for tpl, rate in self.dag_rates:
+            for m in tpl.stage_models:
+                out[m] = out.get(m, 0.0) + rate
+        return {m: r for m, r in out.items() if r > 0}
+
+
+def chain_dag_scenario(n_nodes: int, jobs_per_node_s: float = 20.0,
+                       models: tuple[str, ...] = ("le", "ssd", "goo"),
+                       slo_scale: float = 1.25,
+                       priority_mix: tuple[tuple[int, float], ...]
+                       = ((0, 1.0),)) -> DagScenario:
+    """Pure chain-job traffic (the simplest DAG rung)."""
+    tpl = chain_template(models, slo_scale)
+    return DagScenario(name=f"dag-chain-{n_nodes}n", n_nodes=n_nodes,
+                       dag_rates=((tpl, jobs_per_node_s * n_nodes),),
+                       priority_mix=priority_mix)
+
+
+def fanout_fanin_scenario(n_nodes: int, jobs_per_node_s: float = 10.0,
+                          n_branches: int = 3,
+                          slo_scale: float = 1.25,
+                          priority_mix: tuple[tuple[int, float], ...]
+                          = ((0, 1.0),)) -> DagScenario:
+    """Pure fan-out/fan-in traffic (parallel branches + fusion join)."""
+    tpl = fanout_fanin_template(n_branches=n_branches, slo_scale=slo_scale)
+    return DagScenario(name=f"dag-fanout-{n_nodes}n", n_nodes=n_nodes,
+                       dag_rates=((tpl, jobs_per_node_s * n_nodes),),
+                       priority_mix=priority_mix)
+
+
+def mixed_dag_scenario(n_nodes: int,
+                       chain_jobs_per_node_s: float = 15.0,
+                       fanout_jobs_per_node_s: float = 8.0,
+                       background_util: float = 0.4,
+                       slo_scale: float = 1.25,
+                       priority_mix: tuple[tuple[int, float], ...]
+                       = DEFAULT_PRIORITY_MIX) -> DagScenario:
+    """DAG jobs + classic single-model traffic on one fleet.
+
+    Background singles at ``background_util`` of the sweep mix keep the
+    fleet busy with stage-oblivious work, so the DAG rungs measure how
+    compound jobs fare *among* ordinary traffic, not on an idle fleet.
+    """
+    chain = chain_template(("le", "ssd", "goo"), slo_scale)
+    fanout = fanout_fanin_template(("le", "ssd"), "goo", 3, "le",
+                                   slo_scale)
+    bg = {m: r * background_util * n_nodes
+          for m, r in SWEEP_NODE_RATES.items()}
+    return DagScenario(
+        name=f"dag-mixed-{n_nodes}n", n_nodes=n_nodes,
+        dag_rates=((chain, chain_jobs_per_node_s * n_nodes),
+                   (fanout, fanout_jobs_per_node_s * n_nodes)),
+        background=bg, priority_mix=priority_mix)
+
+
 def schedulability_population(models: tuple[str, ...] = ("le", "goo", "res", "ssd", "vgg"),
                               ) -> list[dict[str, float]]:
     """All 4^5 - 1 = 1023 rate vectors of §3.1 / Fig. 4 / Fig. 15."""

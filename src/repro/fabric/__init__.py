@@ -14,13 +14,16 @@ from repro.fabric.priority import (BRONZE, GOLD, PRIORITY_CLASSES, SILVER,
                                    PriorityClass, assign_priorities,
                                    draw_priorities)
 from repro.fabric.router import POLICIES, DispatchStats, FabricRouter
-from repro.fabric.workload import build_fabric, build_trace, build_trace_soa
+from repro.fabric.workload import (build_dag_fabric, build_dag_trace_soa,
+                                   build_fabric, build_trace,
+                                   build_trace_soa)
 
 __all__ = [
     "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
     "FabricNode", "FabricRouter", "GOLD", "GlobalScheduler",
     "MigrationEvent", "NetworkModel", "NodeSpec", "NodeUpdate",
     "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
-    "ServingFabric", "assign_priorities", "build_fabric", "build_trace",
+    "ServingFabric", "assign_priorities", "build_dag_fabric",
+    "build_dag_trace_soa", "build_fabric", "build_trace",
     "build_trace_soa", "draw_priorities",
 ]

@@ -31,8 +31,10 @@ from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.router import DispatchStats, FabricRouter
 from repro.simulator.engine import EngineConfig
 from repro.simulator.events import Request
-from repro.simulator.metrics import SimMetrics, collect_trace
-from repro.simulator.trace import DROPPED, RequestTrace
+from repro.simulator.metrics import (JobMetrics, SimMetrics, collect_jobs,
+                                     collect_trace)
+from repro.simulator.trace import (COMPLETED, DROPPED, FIRST_DROP_STATUS,
+                                   UNSERVED, RequestTrace)
 
 
 @dataclasses.dataclass
@@ -90,6 +92,18 @@ class FabricConfig:
     migration_patience: int = 2
     #: router->new-home lag charged to requests a donor hands back
     handback_ms: float = 5.0
+    # ---- task-graph (DAG) serving ----
+    #: release-frontier cadence for staged traces: nodes advance in
+    #: segments of this length, and stage completions observed at each
+    #: boundary release their children into dispatch.  A released child
+    #: keeps its true arrival (= max parent completion, possibly inside
+    #: the closing segment); the cadence only bounds how stale the
+    #: frontier's knowledge may be — the same causality discipline as the
+    #: migration epochs.
+    stage_release_period_ms: float = 25.0
+    #: critical-path-aware stage placement (router co-location hooks);
+    #: False = stage-oblivious dispatch, the fig_dag contrast arm
+    dag_colocation: bool = True
 
 
 @dataclasses.dataclass
@@ -113,6 +127,8 @@ class FabricMetrics:
     #: applied placement deltas, in decision order (empty when the
     #: migration loop is off or never fired)
     migration_events: list = dataclasses.field(default_factory=list)
+    #: end-to-end job accounting for staged (DAG) traces; None otherwise
+    jobs: JobMetrics | None = None
 
     @property
     def migrations(self) -> int:
@@ -162,7 +178,8 @@ class ServingFabric:
             shed_backlog_ms=self.cfg.shed_backlog_ms,
             reroute_level=self.cfg.reroute_level,
             shed_level=self.cfg.shed_level,
-            affinity_weights=affinity_weights)
+            affinity_weights=affinity_weights,
+            dag_colocation=self.cfg.dag_colocation)
 
     # ---- construction -----------------------------------------------------
 
@@ -269,6 +286,8 @@ class ServingFabric:
         self._served = True
         for node in self.nodes:
             node.trace = trace
+        if trace.has_stages:
+            return self._serve_dag(trace)
         if self.cfg.migrations and self.cfg.migration_period_ms > 0:
             self._dispatch_with_migrations(trace)
         else:
@@ -323,6 +342,171 @@ class ServingFabric:
             self.replayed_ids.append(replay)
             self.router.dispatch(trace, replay, failover=not handback,
                                  handback=handback)
+
+    # ---- task-graph (DAG) serving ------------------------------------------
+
+    def _serve_dag(self, trace: RequestTrace) -> FabricMetrics:
+        """Epoch-wave serving for staged traces: the release frontier.
+
+        Roots (and plain single-model rows mixed into the trace) enter
+        the arrival-ordered dispatch stream in their arrival segment.
+        Non-root stages start unreleased (``arrival_ms = inf``); at each
+        segment boundary the frontier scans completions the node engines
+        have stamped so far and releases every stage whose parents all
+        completed, at ``arrival = max(parent completions)`` — possibly
+        *inside* the closing segment, which is legal: the engines ingest
+        late arrivals with a monotonic clock clamp, so the stage queues
+        from its true release instant and its SLO age is measured from
+        there.  The cadence (``stage_release_period_ms``) only bounds how
+        stale the frontier's knowledge can be, exactly like the migration
+        epochs' observe-then-act discipline.  A stage with a failed
+        parent (dropped/shed/lost/unserved) is dropped without dispatch
+        and the failure cascades down its subtree — the job is already
+        dead end-to-end.
+
+        Node engines run incrementally (``begin_stream`` / ``run_until``
+        / ``finish_stream``) and sequentially — completions on one node
+        release stages onto another mid-horizon, so nodes are not
+        independent and ``node_workers`` does not apply here.
+        """
+        cfg = self.cfg
+        if cfg.migrations:
+            raise ValueError(
+                "staged (DAG) traces cannot be combined with migrations "
+                "yet — the release frontier and the migration epoch loop "
+                "both own the dispatch cadence")
+        if cfg.period_s is not None:
+            raise ValueError(
+                "staged (DAG) traces cannot drive per-node controllers "
+                "(period_s) yet — incremental engines take no tick "
+                "subscriber")
+        if any(n.fails_in_run() for n in self.nodes):
+            raise ValueError(
+                "staged (DAG) traces do not support scheduled node "
+                "failures yet — casualty replay is stage-oblivious")
+        period = cfg.stage_release_period_ms
+        horizon = cfg.horizon_ms
+        n_epochs = max(1, int(np.ceil(horizon / period - 1e-9)))
+        for node in self.nodes:
+            node.begin_stream()
+        npar = trace.n_parents
+        roots = np.flatnonzero(npar == 0)
+        r_epoch = np.minimum(
+            (trace.arrival_ms[roots] // period).astype(np.int64),
+            n_epochs - 1)
+        order = np.argsort(r_epoch, kind="stable")
+        roots, r_epoch = roots[order], r_epoch[order]
+        bounds = np.searchsorted(r_epoch, np.arange(n_epochs + 1))
+        self._dag_unreleased = npar > 0
+        self._dag_edges = trace.stage_edges()
+        for k in range(n_epochs):
+            t1 = min((k + 1) * period, horizon)
+            ids = roots[bounds[k]:bounds[k + 1]]
+            if k:
+                # every engine has run to the previous boundary: stamps
+                # at/before it are final (their COMPLETE events fired)
+                rel = self._release_frontier(trace, min(k * period, horizon))
+                if len(rel):
+                    ids = np.concatenate([ids, rel]) if len(ids) else rel
+            if len(ids):
+                self.router.dispatch(trace, ids)
+                for node in self.nodes:
+                    node.feed_pending()
+            for node in self.nodes:
+                node.run_until(t1)
+        # post-horizon: drain, then keep releasing until the frontier
+        # runs dry (completions stamped in the drain can still free
+        # children; each round strictly shrinks the unreleased set)
+        ecfg = self.nodes[0].cfg
+        max_clock = ecfg.horizon_ms * ecfg.drain_factor
+        while True:
+            for node in self.nodes:
+                node.run_until(max_clock)
+            rel = self._release_frontier(trace, max_clock)
+            if not len(rel):
+                break
+            self.router.dispatch(trace, rel)
+            for node in self.nodes:
+                node.feed_pending()
+        for node in self.nodes:
+            node.finish_stream()
+            node.retired = True
+        # conservation: stages whose parents never resolved (stuck in a
+        # queue at shutdown, now UNSERVED) were never released — close
+        # them the same way so every row leaves PENDING
+        left = np.flatnonzero(self._dag_unreleased)
+        if len(left):
+            trace.status[left] = UNSERVED
+            self._dag_unreleased[left] = False
+        fleet = collect_trace(trace, horizon)
+        per_node = {n.node_id: n.metrics for n in self.nodes
+                    if n.metrics is not None}
+        preemptions = sum(n.engine.preemptions if n.engine is not None
+                          else n.preemptions for n in self.nodes)
+        return FabricMetrics(fleet=fleet, per_node=per_node,
+                             stats=self.router.stats,
+                             preemptions=preemptions,
+                             jobs=collect_jobs(trace))
+
+    def _release_frontier(self, trace: RequestTrace,
+                          t_now: float) -> np.ndarray:
+        """One frontier pass: cascade failures, release ready stages.
+
+        Returns the newly released row indices (arrivals already stamped
+        to ``max(parent completions)``).  Only completions at/before
+        ``t_now`` count: engines stamp completion at batch *launch*, so a
+        later stamp belongs to a batch still in flight at the boundary —
+        revocable by preemption until its COMPLETE event fires.  Failure
+        cascades run to a fixpoint inside the pass — a dropped stage's
+        grandchildren drop in the same pass — while releases cannot
+        enable further releases (a freshly released stage has not
+        completed yet), so one scan per failure round suffices.  The live
+        edge set shrinks as children resolve, keeping later passes cheap.
+        """
+        status = trace.status
+        npar = trace.n_parents
+        un = self._dag_unreleased
+        child, parent = self._dag_edges
+        n = len(trace)
+        released: list[np.ndarray] = []
+        while True:
+            live = un[child]
+            child, parent = child[live], parent[live]
+            self._dag_edges = (child, parent)
+            if not child.size:
+                break
+            pstat = status[parent]
+            fail_cnt = np.bincount(child[pstat >= FIRST_DROP_STATUS],
+                                   minlength=n)
+            final = (pstat == COMPLETED) & \
+                (trace.completion_ms[parent] <= t_now)
+            done_cnt = np.bincount(child[final], minlength=n)
+            failed = np.flatnonzero(un & (fail_cnt > 0))
+            ready = np.flatnonzero(un & (fail_cnt == 0)
+                                   & (done_cnt == npar))
+            if not failed.size and not ready.size:
+                break
+            if failed.size:
+                status[failed] = DROPPED
+                un[failed] = False
+            if ready.size:
+                ps = trace.parent_start[ready]
+                kk = npar[ready].astype(np.int64)
+                starts = np.cumsum(kk) - kk
+                par_rows = np.repeat(ps, kk) + (
+                    np.arange(int(kk.sum()), dtype=np.int64)
+                    - np.repeat(starts, kk))
+                rel_t = np.maximum.reduceat(
+                    trace.completion_ms[par_rows], starts)
+                trace.arrival_ms[ready] = rel_t
+                un[ready] = False
+                released.append(ready)
+            if not failed.size:
+                break
+        if not released:
+            return np.empty(0, dtype=np.int64)
+        return released[0] if len(released) == 1 else \
+            np.concatenate(released)
 
     def _dispatch_with_migrations(self, trace: RequestTrace) -> None:
         """Route the trace epoch by epoch, migrating placement between.

@@ -66,6 +66,8 @@ class FabricNode:
         #: set by the fabric once this node has executed (failed nodes run
         #: first); the router must not dispatch anything more to it.
         self.retired = False
+        #: pending_idx watermark for the incremental (DAG) feed
+        self._fed = 0
         # router-visible load signals, derived from the partitioning
         self.rate_by_model: dict[str, float] = \
             schedule.assignments_by_model()
@@ -223,6 +225,38 @@ class FabricNode:
         self.engine.submit_trace(
             self.trace, np.asarray(self.pending_idx, dtype=np.int64))
         self.metrics = self.engine.run()
+        return self.metrics
+
+    # ---- incremental execution (DAG release-frontier epochs) ---------------
+
+    def begin_stream(self) -> None:
+        """Create this node's engine for epoch-wave (DAG) serving.
+
+        Instead of one whole-slice ``run()``, the fabric feeds released
+        stages epoch by epoch (:meth:`feed_pending`) and advances the
+        engine in bounded segments (:meth:`run_until`), so completions on
+        one node can release child stages on another mid-horizon.
+        """
+        self.engine = EventHeapEngine(self.profiles, self.cfg,
+                                      schedule=self.schedule, on_tick=None)
+        self.engine.submit_trace(self.trace, np.empty(0, dtype=np.int64))
+        self._fed = 0
+
+    def feed_pending(self) -> None:
+        """Hand newly-dispatched ``pending_idx`` entries to the engine."""
+        new = self.pending_idx[self._fed:]
+        if new:
+            self.engine.add_arrivals(np.asarray(new, dtype=np.int64))
+            self._fed = len(self.pending_idx)
+
+    def run_until(self, t_ms: float) -> None:
+        """Advance to ``t_ms`` and publish stamps for the frontier."""
+        self.engine.run_until(t_ms)
+        self.engine.sync_trace()
+
+    def finish_stream(self) -> SimMetrics:
+        """Drain the incremental engine and collect this node's metrics."""
+        self.metrics = self.engine.finish()
         return self.metrics
 
     def casualties(self) -> np.ndarray:

@@ -52,6 +52,28 @@ shapes (per-model candidate subsets, heterogeneous drains, scheduled
 failures, the other two policies) take the generic loop, which preserves
 the object path's arithmetic op-for-op.
 
+Task-graph (DAG) dispatch
+-------------------------
+Staged traces (``trace.has_stages``) arrive epoch by epoch from the
+fabric's release-frontier loop, and the generic loop gains two
+critical-path-aware hooks (``dag_colocation``, default on):
+
+  * **co-locate chatty edges** — a released stage prefers the node that
+    ran its *critical parent* (the latest-finishing one, i.e. the parent
+    on the job's critical path): a 1:1 parent→child hand-off or a fan-in
+    lands next to that parent and dodges the ``NetworkModel`` round-trip
+    entirely (``d = 0`` — the tensor is already in host memory there).
+    The preference yields to the base policy when that node is dead,
+    lacks the model, or is over the shed threshold.
+  * **spread parallel branches** — a child whose single parent fans out
+    to several branches skips the preference, so sibling branches fall
+    through to the base policy's load spreading instead of convoying
+    behind each other on the parent's node.
+
+Every dispatched stage stamps ``trace.node_id`` so later stages can see
+where their parents ran.  Stage traces never take the clear-time fast
+path (per-request parent lookups don't collapse to one heap).
+
 Time-varying placement (live migration)
 ---------------------------------------
 Under the fabric's global rescheduler, placement is *state that changes
@@ -145,7 +167,8 @@ class FabricRouter:
                  reroute_level: int = 1,
                  shed_level: int = 2,
                  affinity_weights: dict[int, float] | None = None,
-                 rate_window_ms: float = 5_000.0):
+                 rate_window_ms: float = 5_000.0,
+                 dag_colocation: bool = True):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"one of {sorted(POLICIES)}")
@@ -160,7 +183,12 @@ class FabricRouter:
         #: defaults to uniform.  Skewed weights model a fleet whose sticky
         #: sessions concentrate on a few nodes (core/scenarios.py).
         self.affinity_weights = affinity_weights or {}
+        #: critical-path-aware stage placement (see module docstring);
+        #: off = stage-oblivious dispatch, the fig_dag contrast arm
+        self.dag_colocation = dag_colocation
         self._loads = [_NodeLoad(n) for n in nodes]
+        self._load_by_node_id = {ld.node.node_id: ld for ld in self._loads}
+        self._fanout_l: list[int] | None = None   # per-row child count
         self.stats = DispatchStats()
 
     # ---- dispatch entry ---------------------------------------------------
@@ -236,6 +264,10 @@ class FabricRouter:
         retirements that would change the candidate set mid-pass.
         """
         if self.policy != "least-loaded" or not self._loads:
+            return False
+        if trace.has_stages:
+            # per-request parent lookups (co-location, node stamping)
+            # don't collapse to a single clear-time heap
             return False
         if self.shed_level < self.reroute_level:
             return False            # shed implies re-route eligibility
@@ -400,6 +432,40 @@ class FabricRouter:
                 return ld
         return ordered[0]
 
+    def _colocate_target(self, trace: RequestTrace, ps: int, npk: int,
+                         model: str, t: float) -> _NodeLoad | None:
+        """Preferred node for a released stage: its critical parent's.
+
+        Returns None when the stage should spread instead — its parent
+        fans out to parallel branches, the parent's node is unknown/dead/
+        unprovisioned, or that node is over the shed threshold.
+        """
+        if npk == 1:
+            if self._fanout_l[ps] != 1:
+                return None           # parallel branch: let the policy spread
+            pbest = ps
+        else:
+            # fan-in: chase the latest-finishing (critical-path) parent
+            done = trace.completion_ms
+            pbest, best = -1, -np.inf
+            for pr in range(ps, ps + npk):
+                v = done[pr]
+                if v == v and v >= best:
+                    best, pbest = v, pr
+            if pbest < 0:
+                return None
+        pn = int(trace.node_id[pbest])
+        if pn < 0:
+            return None
+        ld = self._load_by_node_id.get(pn)
+        if ld is None:
+            return None
+        n = ld.node
+        if not n.alive_at(t) or not n.serves(model, t) \
+                or ld.backlog_ms > self.shed_backlog_ms:
+            return None
+        return ld
+
     def _dispatch_generic(self, trace: RequestTrace, order: np.ndarray,
                           failover: bool) -> None:
         models = trace.models
@@ -414,33 +480,53 @@ class FabricRouter:
         lost_ids: list[int] = []
         sent_ids: list[int] = []
         sent_d: list[float] = []
+        has_stages = trace.has_stages
+        colocate = has_stages and self.dag_colocation
+        if has_stages:
+            node_col = trace.node_id
+            npar_list = trace.n_parents[order].tolist()
+            ps_list = trace.parent_start[order].tolist()
+            if colocate and self._fanout_l is None:
+                _child, parent = trace.stage_edges()
+                self._fanout_l = np.bincount(
+                    parent, minlength=len(trace)).tolist()
         for k in range(len(oid)):
             t = arr_list[k]
             p = pri_list[k]
             m = models[mid_list[k]]
             for ld in self._loads:
                 ld.drain_to(t)
-            cands = self._candidates(m, t)
-            if not cands:
-                # no live node at all: the fleet is down, request is lost
-                lost_ids.append(oid[k])
-                stats.count(stats.lost, p)
-                continue
-            ld = self._choose(m, cands, t)
-            if ld.backlog_ms > self.shed_backlog_ms \
-                    and p >= self.reroute_level:
-                alt = min(cands, key=lambda c: (c.backlog_ms,
-                                                c.node.node_id))
-                if alt.backlog_ms > self.shed_backlog_ms:
-                    if p >= self.shed_level:
-                        shed_ids.append(oid[k])
-                        stats.count(stats.shed, p)
-                        continue
-                elif alt is not ld:
-                    ld = alt
-                    stats.count(stats.rerouted, p)
+            ld = None
+            co = False
+            if colocate and npar_list[k]:
+                ld = self._colocate_target(trace, ps_list[k],
+                                           npar_list[k], m, t)
+                co = ld is not None
+            if ld is None:
+                cands = self._candidates(m, t)
+                if not cands:
+                    # no live node at all: fleet is down, request is lost
+                    lost_ids.append(oid[k])
+                    stats.count(stats.lost, p)
+                    continue
+                ld = self._choose(m, cands, t)
+                if ld.backlog_ms > self.shed_backlog_ms \
+                        and p >= self.reroute_level:
+                    alt = min(cands, key=lambda c: (c.backlog_ms,
+                                                    c.node.node_id))
+                    if alt.backlog_ms > self.shed_backlog_ms:
+                        if p >= self.shed_level:
+                            shed_ids.append(oid[k])
+                            stats.count(stats.shed, p)
+                            continue
+                    elif alt is not ld:
+                        ld = alt
+                        stats.count(stats.rerouted, p)
             node = ld.node
-            d = net.delay_ms(node.node_id)
+            if co:
+                d = 0.0   # same-node hand-off: no RPC, no round trip
+            else:
+                d = net.delay_ms(node.node_id)
             if d > 0.0:
                 sent_ids.append(oid[k])
                 sent_d.append(d)
@@ -448,6 +534,8 @@ class FabricRouter:
             if track_rates:
                 ld.note(m, t, self.rate_window_ms)
             node.pending_idx.append(oid[k])
+            if has_stages:
+                node_col[oid[k]] = node.node_id
             stats.count(stats.dispatched, node.node_id)
             if failover:
                 stats.failed_over += 1

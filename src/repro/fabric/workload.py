@@ -15,8 +15,11 @@ from __future__ import annotations
 
 from collections.abc import Mapping
 
+import numpy as np
+
 from repro.core.profiles import ModelProfile
-from repro.core.scenarios import FabricScenario
+from repro.core.scenarios import (DagScenario, FabricScenario,
+                                  critical_path_budgets)
 from repro.fabric.fabric import FabricConfig, ServingFabric
 from repro.fabric.priority import draw_priorities
 from repro.simulator.events import PoissonArrivals, Request
@@ -69,6 +72,129 @@ def build_trace(scn: FabricScenario,
                 horizon_s: float, seed: int = 0) -> list[Request]:
     """Object-edge variant of :func:`build_trace_soa` (same trace)."""
     return build_trace_soa(scn, profiles, horizon_s, seed).to_requests()
+
+
+def build_dag_trace_soa(scn: DagScenario,
+                        profiles: Mapping[str, ModelProfile],
+                        horizon_s: float, seed: int = 0) -> RequestTrace:
+    """Materialize a :class:`DagScenario` into a *staged* request trace.
+
+    Jobs arrive Poisson per template; each job's stages occupy one
+    contiguous row block in topological order (stage ``s`` of job ``j``
+    at ``base + j * n_stages + s``), so every stage's fan-in is a single
+    parent row range and per-job reductions are ``reduceat``-shaped.
+    Root stages carry the job's arrival; non-roots start at ``inf`` and
+    are released by the fabric's frontier pass at ``max(parent
+    completions)``.  Per-stage SLO budgets come from
+    :func:`~repro.core.scenarios.critical_path_budgets` with the models'
+    standalone SLOs as weights.  Background single-model traffic is
+    appended with ``job_id = -1`` — the classic rows and stage rows
+    share one trace and one fleet.  Priorities are drawn per *job*
+    (stages inherit) and per background request.
+    """
+    gen = PoissonArrivals(seed=seed)
+    horizon_ms = horizon_s * 1e3
+    models: list[str] = []
+    index: dict[str, int] = {}
+
+    def mid_of(m: str) -> int:
+        if m not in index:
+            index[m] = len(models)
+            models.append(m)
+        return index[m]
+
+    arr_p, slo_p, mid_p = [], [], []
+    jid_p, sid_p, ps_p, npar_p, bud_p, jslo_p, jarr_p = \
+        [], [], [], [], [], [], []
+    stage_counts: list[np.ndarray] = []   # per-job stage count, layout order
+    n_rows = n_jobs = bg_rows = 0
+    for tpl, rate in scn.dag_rates:
+        if rate <= 0:
+            continue
+        times = gen.constant_times(rate, horizon_ms)
+        nj = len(times)
+        if nj == 0:
+            continue
+        ns = tpl.n_stages
+        weights = {m: profiles[m].slo_ms for m in set(tpl.stage_models)}
+        job_slo, budgets = critical_path_budgets(tpl, weights)
+        mids = np.array([mid_of(m) for m in tpl.stage_models],
+                        dtype=np.int32)
+        is_root = np.array([not p for p in tpl.parents])
+        first = np.array([tpl.first_parent(s) for s in range(ns)],
+                         dtype=np.int64)
+        npar = np.array([len(p) for p in tpl.parents], dtype=np.int32)
+        row0 = n_rows + np.arange(nj, dtype=np.int64) * ns
+        arr_p.append(np.where(is_root[None, :], times[:, None],
+                              np.inf).ravel())
+        mid_p.append(np.tile(mids, nj))
+        bud = np.tile(np.asarray(budgets, dtype=np.float64), nj)
+        slo_p.append(bud)
+        bud_p.append(bud.copy())
+        jid_p.append(np.repeat(
+            np.arange(n_jobs, n_jobs + nj, dtype=np.int64), ns))
+        sid_p.append(np.tile(np.arange(ns, dtype=np.int32), nj))
+        ps_p.append(np.where(first[None, :] >= 0,
+                             row0[:, None] + first[None, :], -1).ravel())
+        npar_p.append(np.tile(npar, nj))
+        jslo_p.append(np.full(nj * ns, job_slo))
+        jarr_p.append(np.repeat(times, ns))
+        stage_counts.append(np.full(nj, ns, dtype=np.int64))
+        n_rows += nj * ns
+        n_jobs += nj
+    for m in sorted(scn.background):
+        r = scn.background[m]
+        if r <= 0 or m not in profiles:
+            continue
+        times = gen.constant_times(r, horizon_ms)
+        k = len(times)
+        if k == 0:
+            continue
+        slo = profiles[m].slo_ms
+        arr_p.append(times)
+        mid_p.append(np.full(k, mid_of(m), dtype=np.int32))
+        slo_p.append(np.full(k, slo))
+        bud_p.append(np.full(k, slo))
+        jid_p.append(np.full(k, -1, dtype=np.int64))
+        sid_p.append(np.full(k, -1, dtype=np.int32))
+        ps_p.append(np.full(k, -1, dtype=np.int64))
+        npar_p.append(np.zeros(k, dtype=np.int32))
+        jslo_p.append(np.full(k, slo))
+        jarr_p.append(times.copy())
+        n_rows += k
+        bg_rows += k
+    if n_rows == 0:
+        return RequestTrace([], np.empty(0), np.empty(0),
+                            np.empty(0, dtype=np.int32))
+    trace = RequestTrace(models, np.concatenate(arr_p),
+                         np.concatenate(slo_p), np.concatenate(mid_p))
+    levels = draw_priorities(n_jobs + bg_rows, dict(scn.priority_mix),
+                             seed=seed + 1)
+    if levels is not None:
+        counts = np.concatenate(
+            stage_counts + [np.ones(bg_rows, dtype=np.int64)]
+            if bg_rows else stage_counts)
+        trace.priority[:] = np.repeat(levels, counts)
+    trace.attach_stages(np.concatenate(jid_p), np.concatenate(sid_p),
+                        np.concatenate(ps_p), np.concatenate(npar_p),
+                        np.concatenate(bud_p), np.concatenate(jslo_p),
+                        np.concatenate(jarr_p))
+    return trace
+
+
+def build_dag_fabric(scn: DagScenario,
+                     profiles: Mapping[str, ModelProfile],
+                     cfg: FabricConfig | None = None,
+                     **build_kwargs) -> ServingFabric:
+    """Provision a fabric for a DAG scenario's *effective* model streams.
+
+    Stage multiplicities matter for capacity: a chain job of three
+    models is three requests, so :meth:`DagScenario.fleet_rates` folds
+    template rates into per-model req/s before the elastic partitioner
+    sizes the fleet.
+    """
+    return ServingFabric.build(profiles, scn.n_nodes, scn.fleet_rates(),
+                               cfg=cfg, **build_kwargs)
 
 
 def build_fabric(scn: FabricScenario,

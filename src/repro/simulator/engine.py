@@ -260,6 +260,7 @@ class EventHeapEngine:
         # ---- trace state (bound at run()) ----
         self.trace: RequestTrace | None = None
         self._own_chunks: list[np.ndarray] = []      # global ids, submit order
+        self._late_chunks: list[np.ndarray] = []     # post-bind add_arrivals
         self._pending_objs: list[Request] = []       # object-edge submissions
         self._bound = False
         self._arr_idx = 0
@@ -970,6 +971,168 @@ class EventHeapEngine:
                     status_l[j] = UNSERVED
                     if log is not None:
                         log.append(("drop", self.now, models[mid_l[j]]))
+        self._scatter_back()
+        return self.metrics()
+
+    # ---- incremental serving (fabric release-frontier epochs) -------------
+    #
+    # The DAG fabric cannot hand a node its whole trace up front: a stage
+    # only becomes dispatchable when its parents complete, possibly on
+    # another node.  These three methods run the same event loop as
+    # :meth:`run`, but sliced into bounded segments with arrival chunks
+    # fed in between — run() itself is untouched, so the classic
+    # whole-trace path stays byte-identical.
+
+    def add_arrivals(self, idx: np.ndarray) -> None:
+        """Feed newly-released trace rows into a (possibly running) engine.
+
+        Each chunk is sorted by its *current* arrival times and appended
+        to the merged arrival stream.  Chunks normally arrive in
+        time-order (one per release epoch), but a release stamped behind
+        the engine's clock is legal: the ingest loop clamps the clock
+        monotonically and the request simply queues with its true (past)
+        arrival time, so its SLO age is still measured from release.
+        """
+        idx = np.asarray(idx, dtype=np.int64)
+        if not self._bound:
+            # pre-bind: indistinguishable from a submit_trace() chunk
+            self._own_chunks.append(idx)
+            return
+        if idx.size == 0:
+            return
+        tr = self.trace
+        arr = tr.arrival_ms[idx]
+        order = np.argsort(arr, kind="stable")
+        g = idx[order]
+        self._late_chunks.append(g)
+        k = g.size
+        self._arr_l.extend(arr[order].tolist())
+        self._slo_l.extend(tr.slo_ms[g].tolist())
+        self._mid_l.extend(tr.model_id[g].tolist())
+        self._pri_l.extend(tr.priority[g].astype(np.int64).tolist())
+        self._done_l.extend([np.nan] * k)
+        self._status_l.extend([PENDING] * k)
+        self._preempted_l.extend([False] * k)
+        self._n += k
+
+    def run_until(self, t_stop: float) -> None:
+        """Advance the event loop through everything at/before ``t_stop``.
+
+        Arrivals and heap events merge exactly as in :meth:`run` (same
+        1e-12 ingest tolerance); WAKE/COMPLETE events past ``t_stop``
+        stay queued for the next segment.  Incremental runs don't take
+        tick subscribers — the fabric refuses that combination.
+        """
+        if self.on_tick is not None:
+            raise ValueError("incremental serving cannot drive on_tick")
+        if not self._bound:
+            self._bind_trace()
+        heap = self._heap
+        heappop = heapq.heappop
+        arr_l = self._arr_l
+        route = self._route
+        i = self._arr_idx
+        n = self._n
+        while True:
+            if i < n:
+                a = arr_l[i]
+                if a <= t_stop and \
+                        (not heap or a <= heap[0][0] + 1e-12):
+                    if a > self.now:   # late chunks may arrive in the past
+                        self.now = a
+                    route(i)
+                    i += 1
+                    continue
+            if not heap or heap[0][0] > t_stop:
+                break
+            ev = heappop(heap)
+            self.now = ev[0]
+            kind = ev[1]
+            if kind == COMPLETE:
+                if ev[3] != self.epoch:
+                    continue
+                rt = self.lets[ev[4]]
+                if ev[5] != rt.gen:
+                    continue
+                rt.pending = False
+                rt.inflight = None
+                rt.inflight_reqs = None
+                if not self.paused:
+                    self._walk(rt)
+            elif kind == WAKE:
+                if ev[3] != self.epoch:
+                    continue
+                rt = self.lets[ev[4]]
+                rt.pending = False
+                if rt.inflight is None and not self.paused:
+                    self._walk(rt)
+            elif kind == APPLY:
+                if ev[3]:
+                    self._install(self._apply_plan[ev[3] - 1])
+                    if self._log_on:
+                        self.log.append(("apply", self.now))
+                elif self._pending_schedule is not None:
+                    self._install(self._pending_schedule)
+                    self._pending_schedule = None
+                    if self._log_on:
+                        self.log.append(("apply", self.now))
+        self._arr_idx = i
+
+    def sync_trace(self) -> None:
+        """Push current mirror state into the shared trace (mid-run).
+
+        The DAG fabric's release frontier reads completion stamps off the
+        trace between segments.  Completions are stamped at batch
+        *launch*, so a stamp whose time lies beyond the engine's clock
+        belongs to an in-flight batch and is still revocable by
+        preemption — the frontier therefore only acts on stamps at/before
+        the segment boundary it has run every engine to (those batches'
+        COMPLETE events have fired; nothing can preempt them anymore).
+        Revoked stamps are simply overwritten by the next sync.
+        """
+        if not self._bound:
+            return
+        g = (np.concatenate([self._gidx] + self._late_chunks)
+             if self._late_chunks else self._gidx)
+        if not g.size:
+            return
+        tr = self.trace
+        tr.completion_ms[g] = np.asarray(self._done_l, dtype=np.float64)
+        tr.status[g] = np.asarray(self._status_l, dtype=np.uint8)
+
+    def finish(self) -> SimMetrics:
+        """Drain an incremental run and close the books (== run()'s end).
+
+        Runs the loop out to the drain clock, routes tail arrivals,
+        applies the conservation sweep, rebuilds the gathered arrays to
+        cover late chunks, and scatters results into the shared trace.
+        """
+        max_clock = self.cfg.horizon_ms * self.cfg.drain_factor
+        self.run_until(max_clock)
+        route = self._route
+        i = self._arr_idx
+        while i < self._n:
+            route(i)
+            i += 1
+        self._arr_idx = i
+        models = self.trace.models
+        status_l, mid_l = self._status_l, self._mid_l
+        log = self.log if self._log_on else None
+        queues = [q for rt in self.lets for q in rt.queues.values()]
+        queues += list(self.unrouted.values())
+        for q in queues:
+            for j in q.drain():
+                if status_l[j] == PENDING:
+                    status_l[j] = UNSERVED
+                    if log is not None:
+                        log.append(("drop", self.now, models[mid_l[j]]))
+        if self._late_chunks:
+            self._gidx = np.concatenate([self._gidx] + self._late_chunks)
+            self._late_chunks = []
+            self._arr = np.asarray(self._arr_l, dtype=np.float64)
+            self._slo = np.asarray(self._slo_l, dtype=np.float64)
+            self._mid = np.asarray(self._mid_l, dtype=np.int32)
+            self._pri = np.asarray(self._pri_l, dtype=np.int64)
         self._scatter_back()
         return self.metrics()
 

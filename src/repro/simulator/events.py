@@ -33,6 +33,13 @@ class Request:
     #: deliberate SLO-expiry drop at batch formation.  The fabric's
     #: failure-drain path replays only these.
     unserved: bool = False
+    #: Full lifecycle status code (``simulator.trace`` enum) as stamped by
+    #: the SoA path.  ``dropped``/``unserved`` are lossy projections of it
+    #: — they cannot distinguish SHED/LOST from DROPPED — so ``write_back``
+    #: records the code here and ``from_requests`` prefers it, making a
+    #: trace→objects→trace round trip byte-identical.  -1 means "never
+    #: touched by a trace": the code is then derived from the bools.
+    status_code: int = -1
 
     @property
     def latency_ms(self) -> float | None:

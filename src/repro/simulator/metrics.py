@@ -65,14 +65,23 @@ def window_metrics(requests: list[Request], window_ms: float,
     pass ``horizon_ms`` so that window's rates are normalized by its true
     span (``horizon_ms - (n_windows - 1) * window_ms``) instead of one
     period.
+
+    Arrivals *before* t=0 (replay rewinds, warm-up traffic) clamp into
+    window 0 the same way — every request lands in exactly one window,
+    so the window totals always sum to the run total.
     """
     buckets: list[list[Request]] = [[] for _ in range(n_windows)]
     for r in requests:
         k = int(r.arrival_ms // window_ms)
-        if 0 <= k < n_windows:
-            buckets[k].append(r)
+        if k < 0:
+            # mirror the k >= n_windows fold: clamp instead of dropping,
+            # so no request silently vanishes from every window
+            k = 0
         elif k >= n_windows:
-            buckets[-1].append(r)
+            k = n_windows - 1
+        buckets[k].append(r)
+    assert sum(len(b) for b in buckets) == len(requests), \
+        "window bucketing must conserve requests"
     spans = [window_ms] * n_windows
     if horizon_ms is not None:
         spans[-1] = max(horizon_ms - (n_windows - 1) * window_ms, 1e-9)
@@ -152,6 +161,67 @@ def collect_trace(trace, horizon_ms: float, busy_ms: dict | None = None,
                           trace.completion_ms[idx], trace.status[idx],
                           trace.priority[idx], trace.preempted[idx],
                           horizon_ms, busy_ms)
+
+
+@dataclasses.dataclass
+class JobMetrics:
+    """End-to-end accounting for task-graph (DAG) jobs.
+
+    A job *completes* only when every stage completed; it meets its SLO
+    only when the last stage's completion lands within ``job_slo_ms`` of
+    the pristine client arrival (``job_arrival_ms`` — the trace snapshots
+    it because the router mutates per-stage arrivals with network
+    shifts).  Any stage dropped/shed/lost/unserved fails the whole job.
+    Job latency is measured at the sink stage's node-side completion; the
+    final response hop back to the client is not modeled (constant per
+    job, identical across policies).
+    """
+
+    jobs: int = 0
+    completed: int = 0            # all stages completed
+    failed: int = 0               # >= 1 stage dropped/shed/lost/unserved
+    violations: int = 0           # failed + completed past the job SLO
+    latency_p50_ms: float = 0.0   # over completed jobs
+    latency_p99_ms: float = 0.0
+
+    @property
+    def attainment(self) -> float:
+        """Fraction of jobs that completed within their end-to-end SLO."""
+        return 1.0 - self.violations / self.jobs if self.jobs else 1.0
+
+
+def collect_jobs(trace) -> JobMetrics | None:
+    """Reduce a staged trace's rows into per-job end-to-end metrics.
+
+    Jobs are contiguous row groups (the trace builder lays stages out
+    contiguously in topological order), so per-job reductions are
+    ``reduceat`` over group boundaries — no per-job Python.  Returns
+    None for traces without stage columns.
+    """
+    from repro.simulator.trace import COMPLETED
+    if not getattr(trace, "has_stages", False):
+        return None
+    rows = np.flatnonzero(trace.job_id >= 0)
+    if not rows.size:
+        return JobMetrics()
+    jid = trace.job_id[rows]
+    starts = np.flatnonzero(np.r_[True, jid[1:] != jid[:-1]])
+    ok = (trace.status[rows] == COMPLETED)
+    all_done = np.minimum.reduceat(ok.astype(np.int8), starts) == 1
+    finish = np.maximum.reduceat(
+        np.where(ok, trace.completion_ms[rows], -np.inf), starts)
+    job_arr = trace.job_arrival_ms[rows][starts]
+    job_slo = trace.job_slo_ms[rows][starts]
+    late = all_done & ((finish - job_arr) > job_slo)
+    m = JobMetrics(jobs=int(starts.size),
+                   completed=int(all_done.sum()),
+                   failed=int((~all_done).sum()))
+    m.violations = m.failed + int(late.sum())
+    if m.completed:
+        lat = (finish - job_arr)[all_done]
+        m.latency_p50_ms = float(np.percentile(lat, 50))
+        m.latency_p99_ms = float(np.percentile(lat, 99))
+    return m
 
 
 def collect(requests: list[Request], horizon_ms: float,

@@ -33,6 +33,22 @@ path collapse into single array stores):
 
 ``status >= DROPPED`` is the "dropped" predicate everywhere (and what
 ``Request.dropped`` maps back to at the object edge).
+
+Stage columns (compound inference)
+----------------------------------
+A trace can optionally carry *task-graph* columns (:meth:`attach_stages`),
+turning each row into one stage of a multi-model job (frontend → detector
+→ per-region classifier fan-out → fusion).  ``job_id`` groups stages,
+``parent_start``/``n_parents`` encode each stage's parents as a contiguous
+row range (jobs are laid out contiguously in topological order), and
+``slo_budget_ms`` is the stage's share of the single end-to-end
+``job_slo_ms``, decomposed along the critical path
+(``core/scenarios.py:critical_path_budgets``).  Non-root stages start with
+``arrival_ms = inf``: the fabric's release-frontier pass
+(``fabric/fabric.py``) stamps their real arrival at ``max(parent
+completions)`` and only then feeds them into dispatch.  Traces *without*
+stage columns (``has_stages`` False) take the exact PR-5 code path —
+byte-identical results, pinned by the golden suite.
 """
 from __future__ import annotations
 
@@ -64,7 +80,9 @@ class RequestTrace:
 
     __slots__ = ("models", "model_index", "arrival_ms", "slo_ms",
                  "model_id", "priority", "completion_ms", "status",
-                 "preempted")
+                 "preempted", "job_id", "stage_id", "parent_start",
+                 "n_parents", "slo_budget_ms", "job_slo_ms",
+                 "job_arrival_ms", "node_id", "_edges")
 
     def __init__(self, models: Sequence[str], arrival_ms: np.ndarray,
                  slo_ms: np.ndarray, model_id: np.ndarray,
@@ -88,9 +106,89 @@ class RequestTrace:
                        else np.asarray(status, dtype=np.uint8))
         self.preempted = (np.zeros(n, dtype=bool) if preempted is None
                           else np.asarray(preempted, dtype=bool))
+        # stage columns stay None for plain single-model traces — every
+        # consumer checks ``has_stages`` before touching them, so the
+        # classic path never pays for (or observes) the DAG machinery.
+        self.job_id = None            # int64; -1 for single-model rows
+        self.stage_id = None          # int32; -1 for single-model rows
+        self.parent_start = None      # int64 first-parent row; -1 = root
+        self.n_parents = None         # int32 fan-in count; 0 = root
+        self.slo_budget_ms = None     # float64 pristine per-stage budget
+        self.job_slo_ms = None        # float64 end-to-end job SLO (per row)
+        self.job_arrival_ms = None    # float64 pristine job arrival
+        self.node_id = None           # int32 dispatch stamp; -1 = none
+        self._edges = None
 
     def __len__(self) -> int:
         return len(self.arrival_ms)
+
+    # ---- task-graph (stage) columns ---------------------------------------
+
+    @property
+    def has_stages(self) -> bool:
+        """True if this trace carries task-graph columns."""
+        return self.job_id is not None
+
+    def attach_stages(self, job_id: np.ndarray, stage_id: np.ndarray,
+                      parent_start: np.ndarray, n_parents: np.ndarray,
+                      slo_budget_ms: np.ndarray, job_slo_ms: np.ndarray,
+                      job_arrival_ms: np.ndarray) -> None:
+        """Attach task-graph columns, making each row one job stage.
+
+        Parents of row ``i`` are the contiguous row range
+        ``[parent_start[i], parent_start[i] + n_parents[i])`` — the
+        builder lays each job's stages out contiguously in topological
+        order, so any fan-in is a single range.  Single-model rows mixed
+        into the same trace use ``job_id = -1`` / ``n_parents = 0``.
+        ``job_arrival_ms``/``job_slo_ms`` snapshot the client-side job
+        deadline: the router mutates ``arrival_ms``/``slo_ms`` with
+        network shifts, so end-to-end accounting needs the pristine copy.
+        """
+        n = len(self)
+        cols = (job_id, stage_id, parent_start, n_parents, slo_budget_ms,
+                job_slo_ms, job_arrival_ms)
+        if any(len(c) != n for c in cols):
+            raise ValueError("stage columns must match trace length")
+        self.job_id = np.asarray(job_id, dtype=np.int64)
+        self.stage_id = np.asarray(stage_id, dtype=np.int32)
+        self.parent_start = np.asarray(parent_start, dtype=np.int64)
+        self.n_parents = np.asarray(n_parents, dtype=np.int32)
+        self.slo_budget_ms = np.asarray(slo_budget_ms, dtype=np.float64)
+        self.job_slo_ms = np.asarray(job_slo_ms, dtype=np.float64)
+        self.job_arrival_ms = np.asarray(job_arrival_ms, dtype=np.float64)
+        self.node_id = np.full(n, -1, dtype=np.int32)
+        self._edges = None
+        staged = self.n_parents > 0
+        if bool(staged.any()):
+            ps, np_ = self.parent_start[staged], self.n_parents[staged]
+            rows = np.flatnonzero(staged)
+            if (ps < 0).any() or (ps + np_ > rows).any():
+                raise ValueError(
+                    "parents must be earlier rows of the same trace")
+            child, parent = self.stage_edges()
+            if not np.array_equal(self.job_id[child], self.job_id[parent]):
+                raise ValueError("parent rows must belong to the same job")
+        if ((self.parent_start >= 0) != staged).any():
+            raise ValueError("parent_start and n_parents disagree on roots")
+
+    def stage_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """Expanded parent edges ``(child_rows, parent_rows)``.
+
+        Edges are grouped by child in ascending row order (children's
+        parent ranges are contiguous), which is what the release
+        frontier's ``reduceat`` reductions and the router's fan-out
+        ``bincount`` both want.  Cached — stage topology is immutable.
+        """
+        if self._edges is None:
+            np_ = self.n_parents.astype(np.int64)
+            total = int(np_.sum())
+            child = np.repeat(np.arange(len(self), dtype=np.int64), np_)
+            starts = np.cumsum(np_) - np_
+            within = (np.arange(total, dtype=np.int64)
+                      - np.repeat(starts, np_))
+            parent = np.repeat(self.parent_start, np_) + within
+            self._edges = (child, parent)
+        return self._edges
 
     # ---- construction -----------------------------------------------------
 
@@ -151,7 +249,17 @@ class RequestTrace:
             arrival[i] = r.arrival_ms
             slo[i] = r.slo_ms
             prio[i] = r.priority
-            if r.dropped:
+            sc = r.status_code
+            if sc == COMPLETED and r.completion_ms is None:
+                sc = -1   # inconsistent hand-edit: fall back to the bools
+            if sc >= 0:
+                # round-trip path: carry the exact code, so SHED/LOST
+                # survive trace -> objects -> trace (they are
+                # indistinguishable from DROPPED in the bool projection)
+                status[i] = sc
+                if sc == COMPLETED:
+                    done[i] = r.completion_ms
+            elif r.dropped:
                 status[i] = UNSERVED if r.unserved else DROPPED
             elif r.completion_ms is not None:
                 status[i] = COMPLETED
@@ -179,6 +287,7 @@ class RequestTrace:
             r.completion_ms = done[i] if st == COMPLETED else None
             r.dropped = st >= FIRST_DROP_STATUS
             r.unserved = st == UNSERVED
+            r.status_code = st
             r.preempted = preempted[i]
 
     def to_requests(self) -> list[Request]:

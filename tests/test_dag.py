@@ -1,0 +1,312 @@
+"""Compound inference (ISSUE 6): task-graph traces, release frontier,
+critical-path budgets, co-location, and the incremental engine API.
+
+Single-model traces (``has_stages`` False) take the exact PR-5 code path
+— that is pinned by the golden suite (test_soa_equivalence.py); these
+tests cover only the new DAG machinery.
+"""
+import numpy as np
+import pytest
+
+from soa_scenarios import PROFS, _poisson_trace
+from repro.core import ElasticPartitioning
+from repro.core.scenarios import (DagScenario, DagTemplate,
+                                  chain_dag_scenario, chain_template,
+                                  critical_path_budgets,
+                                  fanout_fanin_template,
+                                  mixed_dag_scenario)
+from repro.fabric import FabricConfig, NetworkModel, ServingFabric
+from repro.fabric.workload import build_dag_fabric, build_dag_trace_soa
+from repro.simulator import EngineConfig, EventHeapEngine, RequestTrace
+from repro.simulator.metrics import collect_jobs
+from repro.simulator.trace import COMPLETED, DROPPED, PENDING, UNSERVED
+
+WEIGHTS = {m: p.slo_ms for m, p in PROFS.items()}
+
+
+# ---------------------------------------------------------------------------
+# templates + budget decomposition
+# ---------------------------------------------------------------------------
+
+def test_template_validation_rejects_bad_shapes():
+    with pytest.raises(ValueError):   # parent >= own stage id
+        DagTemplate("bad", ("le", "goo"), ((), (1,)))
+    with pytest.raises(ValueError):   # non-consecutive parents
+        DagTemplate("bad", ("le", "goo", "res", "ssd"),
+                    ((), (), (), (0, 2)))
+    with pytest.raises(ValueError):   # stage 0 must be a root
+        DagTemplate("bad", ("le",), ((0,),))
+    with pytest.raises(ValueError):   # length mismatch
+        DagTemplate("bad", ("le", "goo"), ((),))
+
+
+def test_critical_path_budgets_sum_to_job_slo():
+    """Budgets along the critical path sum exactly to the job SLO; every
+    stage gets at least ``slo_scale`` times its own weight."""
+    for tpl in (chain_template(("le", "ssd", "goo"), slo_scale=1.25),
+                fanout_fanin_template(("le", "ssd"), "goo", 3, "le",
+                                      slo_scale=2.0)):
+        job_slo, budgets = critical_path_budgets(tpl, WEIGHTS)
+        w = [WEIGHTS[m] for m in tpl.stage_models]
+        cpl = job_slo / tpl.slo_scale
+        for i, b in enumerate(budgets):
+            assert b >= tpl.slo_scale * w[i] - 1e-9
+        # chain: every stage is critical; fanout: pre-chain + one branch
+        # + fusion is one critical path — its budgets telescope
+        if all(len(p) <= 1 for p in tpl.parents):
+            assert sum(budgets) == pytest.approx(job_slo)
+        assert cpl == pytest.approx(
+            max(sum(w[j] for j in path) for path in _root_leaf_paths(tpl)))
+
+
+def _root_leaf_paths(tpl):
+    children = [[] for _ in range(tpl.n_stages)]
+    for i, ps in enumerate(tpl.parents):
+        for p in ps:
+            children[p].append(i)
+    paths = []
+
+    def walk(i, acc):
+        acc = acc + [i]
+        if not children[i]:
+            paths.append(acc)
+        for c in children[i]:
+            walk(c, acc)
+    for i, ps in enumerate(tpl.parents):
+        if not ps:
+            walk(i, [])
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# trace builder layout
+# ---------------------------------------------------------------------------
+
+def test_dag_trace_layout_contiguous_jobs():
+    scn = chain_dag_scenario(2, jobs_per_node_s=8.0,
+                             priority_mix=((0, 0.4), (2, 0.6)))
+    trace = build_dag_trace_soa(scn, PROFS, horizon_s=4.0, seed=5)
+    assert trace.has_stages
+    ns = 3
+    assert len(trace) % ns == 0
+    jid = trace.job_id.reshape(-1, ns)
+    assert (jid == jid[:, :1]).all(), "stages of a job must be contiguous"
+    assert np.array_equal(trace.stage_id.reshape(-1, ns)[0],
+                          np.arange(ns))
+    # roots carry the job arrival, non-roots start unreleased (inf)
+    roots = trace.n_parents == 0
+    assert np.isfinite(trace.arrival_ms[roots]).all()
+    assert np.isinf(trace.arrival_ms[~roots]).all()
+    assert np.array_equal(trace.job_arrival_ms[roots],
+                          trace.arrival_ms[roots])
+    # chain: each stage's single parent is the previous row
+    rows = np.arange(len(trace))
+    assert np.array_equal(trace.parent_start[~roots], rows[~roots] - 1)
+    assert (trace.parent_start[roots] == -1).all()
+    # priorities drawn per job, broadcast to stages
+    pri = trace.priority.reshape(-1, ns)
+    assert (pri == pri[:, :1]).all()
+    # stage budgets sum to the job SLO along the chain
+    bud = trace.slo_budget_ms.reshape(-1, ns)
+    assert np.allclose(bud.sum(axis=1), trace.job_slo_ms.reshape(-1, ns)[:, 0])
+
+
+def test_mixed_trace_appends_background_singles():
+    scn = mixed_dag_scenario(2, background_util=0.3)
+    trace = build_dag_trace_soa(scn, PROFS, horizon_s=3.0, seed=2)
+    bg = trace.job_id == -1
+    assert bg.any() and (~bg).any()
+    assert (trace.n_parents[bg] == 0).all()
+    assert (trace.parent_start[bg] == -1).all()
+    assert np.isfinite(trace.arrival_ms[bg]).all()
+    # effective rates include stage multiplicities for provisioning
+    rates = scn.fleet_rates()
+    assert rates["ssd"] > scn.background["ssd"]
+
+
+# ---------------------------------------------------------------------------
+# release frontier: causality + conservation
+# ---------------------------------------------------------------------------
+
+def _serve(scn, colocation=True, horizon_s=5.0, seed=3, net_ms=0.0):
+    trace = build_dag_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    cfg = FabricConfig(network=(NetworkModel(base_ms=net_ms) if net_ms
+                                else NetworkModel.zero()),
+                       dag_colocation=colocation)
+    fm = build_dag_fabric(scn, PROFS, cfg=cfg).serve_trace(trace)
+    return trace, fm
+
+
+def test_chain_serving_causality_and_conservation():
+    scn = chain_dag_scenario(2, jobs_per_node_s=12.0)
+    trace, fm = _serve(scn, horizon_s=5.0)
+    # conservation: every row leaves PENDING
+    assert not (trace.status == PENDING).any()
+    f = fm.fleet
+    assert f.completed + f.dropped == f.total
+    # causality: a completed child's release is at/after each completed
+    # parent's completion (network shifts only push arrivals later)
+    child, parent = trace.stage_edges()
+    ok = trace.status == COMPLETED
+    both = ok[child] & ok[parent]
+    assert (trace.arrival_ms[child[both]] + 1e-9
+            >= trace.completion_ms[parent[both]]).all()
+    # job accounting is consistent with stage statuses
+    j = fm.jobs
+    assert j is not None and j.jobs > 0
+    assert j.completed + j.failed == j.jobs
+    assert 0.0 <= j.attainment <= 1.0
+
+
+def test_unservable_root_fails_whole_job():
+    """A root whose model no node serves never resolves mid-run (it sits
+    unrouted until the conservation sweep), so its descendants are never
+    released — every row still closes as a drop and every job fails."""
+    tpl = chain_template(("vgg", "goo", "le"))
+    scn = DagScenario(name="dead-root", n_nodes=1,
+                      dag_rates=((tpl, 20.0),))
+    trace = build_dag_trace_soa(scn, PROFS, horizon_s=3.0, seed=1)
+    # fabric provisioned for goo/le only: every vgg root is unservable
+    fabric = ServingFabric.build(PROFS, 1, {"goo": 60.0, "le": 60.0},
+                                 cfg=FabricConfig())
+    fm = fabric.serve_trace(trace)
+    roots = trace.stage_id == 0
+    assert (trace.status[roots] == UNSERVED).all()
+    desc = trace.stage_id > 0
+    assert (trace.status[desc] == UNSERVED).all()
+    assert (trace.node_id[desc] == -1).all(), \
+        "unreleased stages must never be dispatched"
+    assert fm.jobs.failed == fm.jobs.jobs
+    assert fm.jobs.attainment == 0.0
+
+
+def test_colocation_beats_oblivious_dispatch():
+    """Under a real per-hop RPC cost, co-locating chatty parent->child
+    edges must not lose job attainment vs stage-oblivious routing (same
+    seeded trace both times)."""
+    scn = mixed_dag_scenario(3, slo_scale=2.0)
+    t_aware, fm_aware = _serve(scn, True, horizon_s=6.0, seed=7,
+                               net_ms=3.0)
+    t_obliv, fm_obliv = _serve(scn, False, horizon_s=6.0, seed=7,
+                               net_ms=3.0)
+    assert fm_aware.jobs.jobs == fm_obliv.jobs.jobs
+    assert fm_aware.jobs.attainment >= fm_obliv.jobs.attainment
+    # co-location visibly removes network hops: some completed non-root
+    # stage ran on its parent's node
+    child, parent = t_aware.stage_edges()
+    same = (t_aware.node_id[child] >= 0) & \
+        (t_aware.node_id[child] == t_aware.node_id[parent])
+    assert same.any()
+
+
+def test_tiny_budget_drops_cascade_mid_run():
+    """An unmeetable stage budget (scale ~0) drops stages at batch
+    formation *mid-run*; the frontier cascades each dropped root's child
+    to DROPPED without ever dispatching it."""
+    scn = chain_dag_scenario(1, jobs_per_node_s=30.0,
+                             models=("le", "goo"), slo_scale=1e-3)
+    trace, fm = _serve(scn, horizon_s=3.0)
+    assert not (trace.status == PENDING).any()
+    child = trace.stage_id == 1
+    cascaded = child & (trace.status == DROPPED) & (trace.node_id == -1)
+    assert cascaded.any(), "frontier must cascade dropped-parent children"
+    # child rows of *dropped* roots are exactly the cascaded set
+    root_dropped = np.flatnonzero(trace.dropped & (trace.stage_id == 0))
+    assert np.array_equal(np.flatnonzero(cascaded), root_dropped + 1)
+    assert fm.jobs.attainment == 0.0, \
+        "no job can meet a microsecond-scale end-to-end SLO"
+
+
+# ---------------------------------------------------------------------------
+# job metrics reduction
+# ---------------------------------------------------------------------------
+
+def test_collect_jobs_reduction():
+    """Hand-built staged trace: two jobs (one late, one failed) plus a
+    background single that job accounting must ignore."""
+    arrival = np.array([0.0, 10.0, 5.0, np.inf, 3.0])
+    trace = RequestTrace(["a", "b"], arrival,
+                         np.full(5, 50.0), np.zeros(5, dtype=np.int32))
+    trace.attach_stages(
+        job_id=np.array([0, 0, 1, 1, -1]),
+        stage_id=np.array([0, 1, 0, 1, -1]),
+        parent_start=np.array([-1, 0, -1, 2, -1]),
+        n_parents=np.array([0, 1, 0, 1, 0]),
+        slo_budget_ms=np.full(5, 50.0),
+        job_slo_ms=np.array([100.0, 100.0, 100.0, 100.0, 50.0]),
+        job_arrival_ms=np.array([0.0, 0.0, 5.0, 5.0, 3.0]))
+    # job 0 completes late (150 > 100); job 1's sink stage dropped;
+    # the background row completes fine and must not count as a job
+    trace.status[:] = [COMPLETED, COMPLETED, COMPLETED, UNSERVED,
+                       COMPLETED]
+    trace.completion_ms[:] = [40.0, 150.0, 30.0, np.nan, 10.0]
+    j = collect_jobs(trace)
+    assert (j.jobs, j.completed, j.failed, j.violations) == (2, 1, 1, 2)
+    assert j.attainment == 0.0
+    assert j.latency_p50_ms == pytest.approx(150.0)
+    # plain traces have no job metrics
+    assert collect_jobs(RequestTrace(
+        ["a"], np.zeros(1), np.ones(1), np.zeros(1, np.int32))) is None
+
+
+# ---------------------------------------------------------------------------
+# incremental engine API == one-shot run()
+# ---------------------------------------------------------------------------
+
+def test_incremental_run_until_matches_run():
+    """Feeding a plain trace in arrival chunks through add_arrivals /
+    run_until / finish reproduces run() stamp for stamp."""
+    rates = {"goo": 150.0, "le": 120.0}
+    horizon_ms = 6_000.0
+    reqs = _poisson_trace(rates, horizon_ms, seed=13,
+                          mix={0: 0.5, 2: 0.5})
+    sched = ElasticPartitioning(PROFS).schedule(rates)
+    cfg = EngineConfig(horizon_ms=horizon_ms, preemption=True)
+
+    trace_a = RequestTrace.from_requests(reqs)
+    eng_a = EventHeapEngine(PROFS, cfg, schedule=sched)
+    eng_a.submit_trace(trace_a, np.arange(len(trace_a)))
+    met_a = eng_a.run()
+
+    trace_b = RequestTrace.from_requests(reqs)
+    eng_b = EventHeapEngine(PROFS, cfg, schedule=sched)
+    eng_b.submit_trace(trace_b, np.empty(0, dtype=np.int64))
+    cuts = (1_500.0, 3_000.0, 4_500.0, horizon_ms)
+    t0 = 0.0
+    for t1 in cuts:
+        arr = trace_b.arrival_ms
+        chunk = np.flatnonzero((arr >= t0) & (arr < t1))
+        eng_b.add_arrivals(chunk)
+        eng_b.run_until(t1)
+        t0 = t1
+    met_b = eng_b.finish()
+
+    assert np.array_equal(trace_a.status, trace_b.status)
+    assert np.array_equal(trace_a.completion_ms, trace_b.completion_ms,
+                          equal_nan=True)
+    assert np.array_equal(trace_a.preempted, trace_b.preempted)
+    assert met_a.per_class == met_b.per_class
+    assert met_a.per_model == met_b.per_model
+
+
+def test_incremental_accepts_past_arrivals():
+    """A chunk released behind the engine clock (the no-flooring release
+    rule) is legal: it queues at its true past arrival and still
+    resolves, with conservation intact."""
+    rates = {"goo": 100.0}
+    horizon_ms = 4_000.0
+    reqs = _poisson_trace(rates, horizon_ms, seed=3)
+    sched = ElasticPartitioning(PROFS).schedule(rates)
+    trace = RequestTrace.from_requests(reqs)
+    eng = EventHeapEngine(PROFS, EngineConfig(horizon_ms=horizon_ms),
+                          schedule=sched)
+    eng.submit_trace(trace, np.empty(0, dtype=np.int64))
+    arr = trace.arrival_ms
+    early = np.flatnonzero(arr < 2_000.0)
+    late = np.flatnonzero(arr >= 2_000.0)
+    eng.add_arrivals(early)
+    eng.run_until(3_000.0)        # clock is now ~3 s
+    eng.add_arrivals(late)        # includes arrivals in [2, 3) — the past
+    eng.finish()
+    assert not (trace.status == PENDING).any()
+    assert (trace.status == COMPLETED).sum() > 0

@@ -189,3 +189,40 @@ def test_trace_object_roundtrip(seed):
              r.dropped, r.unserved, r.preempted) for r in reqs] == \
         [(r.model, r.arrival_ms, r.slo_ms, r.priority, r.completion_ms,
           r.dropped, r.unserved, r.preempted) for r in back]
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_trace_status_roundtrip_preserves_all_six_codes(seed):
+    """trace -> objects -> trace is byte-identical for every status code.
+
+    SHED and LOST project onto the same object bools as DROPPED, so the
+    bool-only reconstruction used to collapse them; the ``status_code``
+    carried on ``Request`` is what keeps the round trip lossless."""
+    from repro.simulator.trace import (COMPLETED, DROPPED, LOST, PENDING,
+                                      SHED, UNSERVED)
+    rng = np.random.default_rng(seed)
+    codes = np.array([PENDING, COMPLETED, DROPPED, UNSERVED, SHED, LOST],
+                     dtype=np.uint8)
+    n = int(rng.integers(6, 200))
+    # every code present at least once, the rest sampled
+    status = np.concatenate([codes, rng.choice(codes, n - 6)])
+    arrival = rng.uniform(0, 1e4, n)
+    done = np.where(status == COMPLETED,
+                    arrival + rng.uniform(0, 250, n), np.nan)
+    trace = RequestTrace(
+        ["m0", "m1", "m2"], arrival, rng.uniform(1, 200, n),
+        rng.integers(0, 3, n).astype(np.int32),
+        priority=rng.integers(0, 3, n).astype(np.int16),
+        completion_ms=done, status=status,
+        preempted=rng.integers(0, 2, n).astype(bool))
+    back = RequestTrace.from_requests(trace.to_requests())
+    assert np.array_equal(back.status, trace.status)
+    assert np.array_equal(back.arrival_ms, trace.arrival_ms)
+    assert np.array_equal(back.slo_ms, trace.slo_ms)
+    assert np.array_equal(back.priority, trace.priority)
+    assert np.array_equal(back.preempted, trace.preempted)
+    assert np.array_equal(back.completion_ms, trace.completion_ms,
+                          equal_nan=True)
+    assert [back.models[m] for m in back.model_id.tolist()] == \
+        [trace.models[m] for m in trace.model_id.tolist()]
