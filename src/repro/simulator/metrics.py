@@ -128,10 +128,12 @@ def collect_arrays(models: list[str], model_id: np.ndarray,
     viol_m = tally(mid, nm, viol_mask)
     drop_m = tally(mid, nm, drop_mask)
     done_m = tally(mid, nm, done_mask)
+    pre_m = tally(mid, nm, preempted)
     for k in np.flatnonzero(tot_m).tolist():
         m.per_model[models[k]] = dict(
             total=int(tot_m[k]), violations=int(viol_m[k]),
-            dropped=int(drop_m[k]), completed=int(done_m[k]))
+            dropped=int(drop_m[k]), completed=int(done_m[k]),
+            preempted=int(pre_m[k]))
     levels, inv = np.unique(priority, return_inverse=True)
     nl = len(levels)
     tot_c = np.bincount(inv, minlength=nl)
@@ -231,7 +233,8 @@ def collect(requests: list[Request], horizon_ms: float,
     for r in requests:
         m.total += 1
         pm = m.per_model.setdefault(
-            r.model, dict(total=0, violations=0, dropped=0, completed=0))
+            r.model, dict(total=0, violations=0, dropped=0, completed=0,
+                          preempted=0))
         pc = m.per_class.setdefault(
             r.priority, dict(total=0, violations=0, dropped=0, completed=0,
                              preempted=0))
@@ -239,6 +242,7 @@ def collect(requests: list[Request], horizon_ms: float,
         pc["total"] += 1
         if r.preempted:
             m.preempted += 1
+            pm["preempted"] += 1
             pc["preempted"] += 1
         if r.dropped:
             m.dropped += 1
