@@ -12,10 +12,11 @@ readable ``BENCH_engine.json`` at the repo root with, per rung:
   * conservation + SLO summary, so a perf win that corrupts results is
     visible in the same file
 
-CLI::
+CLI (use ``./run.sh`` so the allocator environment matches the
+committed numbers)::
 
-    python -m benchmarks.bench_engine            # full ladder + JSON
-    python -m benchmarks.bench_engine --smoke    # CI timing budget:
+    ./run.sh python -m benchmarks.bench_engine           # ladder + JSON
+    ./run.sh python -m benchmarks.bench_engine --smoke   # CI budget:
         100k requests through the fabric single-node path must finish
         under --budget-s wall seconds (exit 1 otherwise)
 """
@@ -197,6 +198,25 @@ def main() -> int:
     if not ok:
         print("SMOKE FAIL: DAG serving path over wall-clock budget "
               "(or conservation broken)")
+        return 1
+    # the streaming continuous-batching walk rides the same wall budget:
+    # per-chunk decode-pool bookkeeping (one heap event per chunk, pool
+    # membership churn every launch) must stay in the same cost class as
+    # the opaque-batch walk.
+    from benchmarks.fig_streaming import run_point as streaming_point
+    t0 = time.perf_counter()
+    p = streaming_point(2, horizon_s=6.0)
+    stream_wall = time.perf_counter() - t0
+    st = p["aware"]
+    ok = stream_wall <= args.budget_s and st["conserved"] \
+        and st["tokens_ok"] and p["oblivious"]["conserved"]
+    print(f"engine-smoke-streaming streams={st['streams']} "
+          f"wall={stream_wall:.2f}s budget={args.budget_s:.0f}s "
+          f"ttft={100 * st['ttft_attainment']:.2f}% "
+          f"conserved={st['conserved']} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        print("SMOKE FAIL: streaming serving path over wall-clock "
+              "budget (or conservation/token accounting broken)")
         return 1
     return 0
 

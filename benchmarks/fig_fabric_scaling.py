@@ -72,6 +72,7 @@ def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
             "goodput_req_s": fm.goodput_req_s,
             "goodput_per_node_req_s": fm.goodput_req_s / scn.n_nodes,
             "violation_rate": fm.violation_rate,
+            "latency_ms_per_model": fm.fleet.latency_ms_per_model,
             "per_class": per_class,
             "preemptions": fm.preemptions,
             "shed": {str(k): v for k, v in fm.stats.shed.items()},

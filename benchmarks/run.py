@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.fig_fabric_scaling",
     "benchmarks.fig_migration",
     "benchmarks.fig_dag",
+    "benchmarks.fig_streaming",
     "benchmarks.bench_engine",
     "benchmarks.kernels_bench",
     "benchmarks.ablations",

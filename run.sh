@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Reproducible bench/test launcher.
+#
+# Pins the environment every benchmark number in BENCH_*.json was taken
+# under, so runs are comparable across machines:
+#
+#   * PYTHONPATH=src — the repo is run from a checkout, not installed;
+#   * tcmalloc via LD_PRELOAD when the system has it — the SoA hot path
+#     allocates large numpy arrays per fork-worker, and glibc malloc's
+#     arena churn adds noisy double-digit-% wall-clock variance;
+#   * a large-alloc report threshold high enough that tcmalloc never
+#     interleaves warnings with the CSV output (multi-GB trace arrays
+#     are expected, not leaks).
+#
+# Usage:
+#   ./run.sh python -m benchmarks.run            # full benchmark suite
+#   ./run.sh python -m benchmarks.bench_engine   # perf ladder
+#   ./run.sh python -m pytest -x -q              # tier-1
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# optional: faster, lower-variance malloc for the fork-heavy benchmarks
+if [ -z "${LD_PRELOAD:-}" ]; then
+    for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+               /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+               /usr/lib/libtcmalloc.so.4; do
+        if [ -e "$lib" ]; then
+            export LD_PRELOAD="$lib"
+            break
+        fi
+    done
+fi
+
+exec "$@"

@@ -48,6 +48,20 @@ SPLIT_PAIRS: tuple[tuple[int, int], ...] = (
 BATCH_SIZES: tuple[int, ...] = tuple(range(1, 33))
 MAX_BATCH = 32
 
+#: Prompt length the calibrated one-shot L(b, p) corresponds to.  A
+#: streaming request's *prefill* over this many tokens costs exactly
+#: L(b, p) (flash_attention regime: compute scales with prompt tokens);
+#: a *decode step* re-reads the weights/KV but computes only one token
+#: per stream (decode_attention regime), so its compute term is 1/REF of
+#: the prefill's while the memory term survives whole — decode is
+#: HBM-bound and barely benefits from partition size past the bandwidth
+#: knee, prefill is compute-bound and scales with it.
+REF_PROMPT_TOKENS = 512
+
+#: Fraction of t0 charged per decode step: launch overhead is mostly
+#: amortized across steps (graph-replay style) but not free.
+DECODE_T0_FRAC = 0.25
+
 
 def raw_compute_ms(prof: ModelProfile, batch: int, p: float,
                    acc: AcceleratorSpec = RTX_2080TI) -> float:
@@ -266,10 +280,87 @@ class LatencyProvider:
                 return s
         return None
 
+    # ---- prefill/decode phase costs (streaming lifecycle) -----------------
+
+    def phase_split(self, prof, batch, p) -> tuple[float, float]:
+        """``(compute_ms, memory_ms)`` decomposition of L(b, p) - t0.
+
+        The default assumes a compute-leaning 60/40 split; providers that
+        know their roofline terms override with the exact decomposition
+        (:class:`AnalyticGPULatency` does).
+        """
+        body = self.latency_ms(prof, batch, p) - prof.t0_ms
+        if body < 0.0:
+            body = 0.0
+        return 0.6 * body, 0.4 * body
+
+    def prefill_ms(self, prof, batch, p,
+                   prompt_tokens: float = REF_PROMPT_TOKENS) -> float:
+        """Prefill cost of a batch of streams with ``prompt_tokens`` each.
+
+        Compute scales with the prompt length (the calibrated L(b, p)
+        *is* the prefill at :data:`REF_PROMPT_TOKENS`); the memory term
+        (weights + activations) is prompt-independent at this fidelity.
+        """
+        comp, mem = self.phase_split(prof, batch, p)
+        return prof.t0_ms + comp * (prompt_tokens / REF_PROMPT_TOKENS) + mem
+
+    def decode_step_ms(self, prof, batch, p) -> float:
+        """One decode step: every live stream in the batch gains a token.
+
+        The weights/KV stream through HBM once per step (full memory
+        term) while only one token per stream is computed (compute term
+        / REF_PROMPT_TOKENS) — the step is bandwidth-bound, so batching
+        decodes amortizes the read and a bigger partition buys little.
+        """
+        comp, mem = self.phase_split(prof, batch, p)
+        return (DECODE_T0_FRAC * prof.t0_ms
+                + comp / REF_PROMPT_TOKENS + mem)
+
+    def max_decode_batch(self, prof, p, tpot_slo_ms,
+                         intf_factor: float = 1.0) -> int:
+        """Largest decode batch whose step keeps every stream's TPOT SLO
+        (0 if even a solo stream cannot hold cadence)."""
+        best = 0
+        for b in self.batch_sizes:
+            if intf_factor * self.decode_step_ms(prof, b, p) <= tpot_slo_ms:
+                best = b
+        return best
+
+    def stream_occupancy(self, prof, p, prompt_tokens, output_tokens,
+                         tpot_slo_ms, batch: int = 8,
+                         decode_concurrency: float | None = None) -> float:
+        """How much busier one streaming request keeps a gpu-let than the
+        single L(b, p) launch a phase-oblivious scheduler books for it.
+
+        Per-request service = amortized prefill + the decode tail.  The
+        tail amortizes over the decode batch that actually forms, which
+        is the *smaller* of the TPOT-feasible cap and the number of
+        streams concurrently in decode (``decode_concurrency``, e.g.
+        ``rate * decode_lifetime``) — a low-rate model pays near-solo
+        decode steps no matter how large the cap is.  Phase-aware
+        provisioning scales a model's booked rate by this factor so
+        decode work is counted.
+        """
+        b = min(batch, self.max_batch)
+        base = self.latency_ms(prof, b, p) / b
+        if base <= 0:
+            return 1.0
+        pre = self.prefill_ms(prof, b, p, prompt_tokens) / b
+        bd = self.max_decode_batch(prof, p, tpot_slo_ms)
+        if bd <= 0:
+            bd = 1
+        if decode_concurrency is not None:
+            bd = max(1, min(bd, int(decode_concurrency)))
+        tail = max(output_tokens - 1.0, 0.0)
+        dec = tail * self.decode_step_ms(prof, bd, p) / bd
+        occ = (pre + dec) / base
+        return occ if occ > 1.0 else 1.0
+
     #: duty-cycle search grid resolution (candidate cycles per tightest SLO)
     duty_grid: int = 24
 
-    def admit(self, entries, p, intf_factor=1.0) -> Admission:
+    def admit(self, entries, p, intf_factor=1.0, streams=None) -> Admission:
         """Completion-time-aware duty-cycle admission (the single core).
 
         ``entries`` is [(profile, rate_req_s), ...]; ``intf_factor`` is
@@ -292,10 +383,22 @@ class LatencyProvider:
         pipeline check (c) inherits the inflation too (a deliberate
         departure from Alg. 1's "interference enters the SLO check only",
         which under-books shared cycles).
+
+        ``streams`` (optional, aligned with ``entries``) marks streaming
+        models: entry i with ``streams[i] = (prompt_tokens,
+        output_tokens, tpot_slo_ms)`` is admitted on its *prefill* cost
+        against ``prof.slo_ms`` read as the TTFT deadline, and the
+        steady-state decode load it adds per cycle — ``rate * duty *
+        (output_tokens - 1)`` tokens at the best TPOT-feasible decode
+        batch — is charged into the pipeline check (c), so a cycle whose
+        decode tail starves prefill is rejected.  ``streams=None`` (or
+        all-``None`` entries) takes the exact pre-streaming path.
         """
         n = len(entries)
         if n == 0:
             return Admission(True, 0.0, (), (), ())
+        if streams is not None and len(streams) != n:
+            raise ValueError("one stream spec (or None) per entry required")
         if isinstance(intf_factor, (int, float)):
             factors = [float(intf_factor)] * n
         else:
@@ -316,12 +419,32 @@ class LatencyProvider:
                 if b > self.max_batch:
                     ok = False
                     break
-                done = t + factors[i] * self.latency_ms(prof, b, p)
+                sp = streams[i] if streams is not None else None
+                if sp is None:
+                    exec_ms = self.latency_ms(prof, b, p)
+                else:
+                    exec_ms = self.prefill_ms(prof, b, p, sp[0])
+                done = t + factors[i] * exec_ms
                 if duty + done > prof.slo_ms:
                     ok = False
                     break
                 batches[i], offsets[i], ests[i] = b, t, done
                 t = done
+            if ok and streams is not None:
+                # steady-state decode occupancy shares the execution slot
+                for i in order:
+                    sp = streams[i]
+                    if sp is None:
+                        continue
+                    ptok, otok, tpot = sp
+                    prof, rate = entries[i]
+                    bd = self.max_decode_batch(prof, p, tpot, factors[i])
+                    if bd == 0:
+                        ok = False
+                        break
+                    toks = rate * duty / 1e3 * max(otok - 1.0, 0.0)
+                    t += (factors[i] * toks
+                          * self.decode_step_ms(prof, bd, p) / bd)
             if ok and t <= duty:
                 return Admission(True, duty, tuple(batches),
                                  tuple(offsets), tuple(ests))
@@ -341,6 +464,11 @@ class AnalyticGPULatency(LatencyProvider):
 
     def latency_ms(self, prof, batch, p):
         return latency_ms(prof, batch, p, self.acc)
+
+    def phase_split(self, prof, batch, p):
+        """Exact roofline decomposition (no 60/40 approximation)."""
+        return (raw_compute_ms(prof, batch, p, self.acc) / prof.efficiency,
+                memory_ms(prof, batch, p, self.acc))
 
 
 class LatencyMemo(LatencyProvider):
@@ -366,12 +494,21 @@ class LatencyMemo(LatencyProvider):
         self.max_batch = self.inner.max_batch
         self._lat: dict[tuple, float] = {}
         self._cap: dict[tuple, int] = {}
+        self._split: dict[tuple, tuple[float, float]] = {}
 
     def latency_ms(self, prof: ModelProfile, batch: int, p: float) -> float:
         key = (prof.name, batch, p)
         v = self._lat.get(key)
         if v is None:
             v = self._lat[key] = self.inner.latency_ms(prof, batch, p)
+        return v
+
+    def phase_split(self, prof: ModelProfile, batch: int,
+                    p: float) -> tuple[float, float]:
+        key = (prof.name, batch, p)
+        v = self._split.get(key)
+        if v is None:
+            v = self._split[key] = self.inner.phase_split(prof, batch, p)
         return v
 
     def max_batch_under_slo(self, prof: ModelProfile, p: float,

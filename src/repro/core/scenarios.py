@@ -593,6 +593,97 @@ def mixed_dag_scenario(n_nodes: int,
         background=bg, priority_mix=priority_mix)
 
 
+# Streaming (prefill/decode) scenarios --------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Token-length distributions and phase SLOs for one model's streams.
+
+    Prompt and output lengths draw from geometric distributions (the
+    long-tail shape of generative traffic) clipped to ``[1, max]``.
+    ``ttft_slo_ms=None`` reuses the model's standalone SLO as the TTFT
+    deadline — the queueing+prefill budget the classic scenarios already
+    grant a one-shot request.  The TPOT SLO is expressed as a multiple
+    of the model's reference decode-step cost (batch 8 on a whole GPU),
+    so the cadence target stays achievable per model without hand-tuned
+    absolute numbers.
+    """
+
+    prompt_mean: float = 256.0
+    prompt_max: int = 1024
+    output_mean: float = 24.0
+    output_max: int = 128
+    ttft_slo_ms: float | None = None
+    tpot_scale: float = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamScenario:
+    """One streaming serving experiment.
+
+    Wraps a classic :class:`FabricScenario` — the vocabulary, Zipf
+    rate machinery, and priority mix are shared with the drift
+    generators — plus a per-model :class:`StreamSpec`.  ``rates`` count
+    *streams* per second; the decode work each stream drags behind its
+    prefill is what phase-aware provisioning accounts for and
+    phase-oblivious provisioning ignores.
+    """
+
+    base: FabricScenario
+    specs: dict[str, StreamSpec] = dataclasses.field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return self.base.name
+
+    @property
+    def n_nodes(self) -> int:
+        return self.base.n_nodes
+
+    @property
+    def rates(self) -> dict[str, float]:
+        return self.base.rates
+
+    def spec(self, model: str) -> StreamSpec:
+        return self.specs.get(model, _DEFAULT_STREAM_SPEC)
+
+
+_DEFAULT_STREAM_SPEC = StreamSpec()
+
+#: chat-shaped models: short prompts, long decode streams, tight TTFT
+INTERACTIVE_STREAM_SPEC = StreamSpec(
+    prompt_mean=96.0, prompt_max=512, output_mean=40.0, output_max=160,
+    tpot_scale=3.0)
+#: summarization/embedding-shaped: long prompts, short outputs
+BATCH_STREAM_SPEC = StreamSpec(
+    prompt_mean=448.0, prompt_max=1024, output_mean=6.0, output_max=24,
+    tpot_scale=6.0)
+
+
+def streaming_zipf_scenario(n_nodes: int,
+                            models: tuple[str, ...] = PAPER_MODELS,
+                            skew: float = 1.1,
+                            util: float = 0.55,
+                            interactive: tuple[str, ...] = ("le", "goo"),
+                            priority_mix: tuple[tuple[int, float], ...]
+                            = DEFAULT_PRIORITY_MIX) -> StreamScenario:
+    """Zipf-popular streaming mix over the paper vocabulary.
+
+    Interactive (chat-shaped) models carry long decode tails; the rest
+    are batch-shaped (prefill-heavy).  ``util`` counts only the *prefill*
+    load — exactly what a phase-oblivious provisioner sees — so the
+    decode tail is the unprovisioned surprise the phase-aware arm
+    corrects for.
+    """
+    rates = zipf_model_rates(models, util * n_nodes, skew, hot_index=0)
+    base = FabricScenario(name=f"stream-zipf-{n_nodes}n", n_nodes=n_nodes,
+                          rates=rates, priority_mix=priority_mix)
+    specs = {m: (INTERACTIVE_STREAM_SPEC if m in interactive
+                 else BATCH_STREAM_SPEC) for m in models}
+    return StreamScenario(base=base, specs=specs)
+
+
 def schedulability_population(models: tuple[str, ...] = ("le", "goo", "res", "ssd", "vgg"),
                               ) -> list[dict[str, float]]:
     """All 4^5 - 1 = 1023 rate vectors of §3.1 / Fig. 4 / Fig. 15."""

@@ -15,8 +15,9 @@ from repro.fabric.priority import (BRONZE, GOLD, PRIORITY_CLASSES, SILVER,
                                    draw_priorities)
 from repro.fabric.router import POLICIES, DispatchStats, FabricRouter
 from repro.fabric.workload import (build_dag_fabric, build_dag_trace_soa,
-                                   build_fabric, build_trace,
-                                   build_trace_soa)
+                                   build_fabric, build_stream_fabric,
+                                   build_stream_trace_soa, build_trace,
+                                   build_trace_soa, stream_occupancies)
 
 __all__ = [
     "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
@@ -24,6 +25,7 @@ __all__ = [
     "MigrationEvent", "NetworkModel", "NodeSpec", "NodeUpdate",
     "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
     "ServingFabric", "assign_priorities", "build_dag_fabric",
-    "build_dag_trace_soa", "build_fabric", "build_trace",
-    "build_trace_soa", "draw_priorities",
+    "build_dag_trace_soa", "build_fabric", "build_stream_fabric",
+    "build_stream_trace_soa", "build_trace", "build_trace_soa",
+    "draw_priorities", "stream_occupancies",
 ]

@@ -104,6 +104,13 @@ class FabricConfig:
     #: critical-path-aware stage placement (router co-location hooks);
     #: False = stage-oblivious dispatch, the fig_dag contrast arm
     dag_colocation: bool = True
+    # ---- streaming (prefill/decode) serving ----
+    #: model -> stream occupancy factor (>= 1) handed to the router so
+    #: its fluid backlog weights streaming models by their true service
+    #: (prefill + decode tail).  None = phase-oblivious routing, the
+    #: fig_streaming contrast arm.  Provisioning-side rate inflation is
+    #: the workload builder's job (fabric.workload.build_stream_fabric).
+    stream_occupancy: dict[str, float] | None = None
 
 
 @dataclasses.dataclass
@@ -179,7 +186,8 @@ class ServingFabric:
             reroute_level=self.cfg.reroute_level,
             shed_level=self.cfg.shed_level,
             affinity_weights=affinity_weights,
-            dag_colocation=self.cfg.dag_colocation)
+            dag_colocation=self.cfg.dag_colocation,
+            stream_occupancy=self.cfg.stream_occupancy)
 
     # ---- construction -----------------------------------------------------
 
@@ -288,6 +296,20 @@ class ServingFabric:
             node.trace = trace
         if trace.has_stages:
             return self._serve_dag(trace)
+        if trace.has_streams:
+            # the node engines refuse these combinations too (a mid-run
+            # reschedule would cut decode pools it cannot carry); fail
+            # here with the fleet-level story instead of deep in a node
+            if self.cfg.migrations:
+                raise ValueError(
+                    "streaming traces cannot be combined with migrations "
+                    "yet — a migration cut cannot carry a node's live "
+                    "decode pools to the model's new home")
+            if self.cfg.period_s is not None:
+                raise ValueError(
+                    "streaming traces cannot drive per-node controllers "
+                    "(period_s) yet — a reorg cut would strand live "
+                    "decode pools")
         if self.cfg.migrations and self.cfg.migration_period_ms > 0:
             self._dispatch_with_migrations(trace)
         else:
@@ -623,11 +645,15 @@ class ServingFabric:
                 ctx = multiprocessing.get_context("fork")
                 with ctx.Pool(w) as pool:
                     for (k, gidx, done, status, preempted, met,
-                         preempts) in pool.map(_run_node_job, ks):
+                         preempts, ftok, tok) in pool.map(_run_node_job,
+                                                          ks):
                         node = self.nodes[k]
                         trace.completion_ms[gidx] = done
                         trace.status[gidx] = status
                         trace.preempted[gidx] |= preempted
+                        if ftok is not None:
+                            trace.first_token_ms[gidx] = ftok
+                            trace.tokens_done[gidx] = tok
                         node.metrics = met
                         node.preemptions = preempts
             finally:
@@ -647,5 +673,11 @@ def _run_node_job(k: int):
     node = _PAR_NODES[k]
     node.run()
     eng = node.engine
+    ftok = tok = None
+    if eng._streams_on:
+        # the stream mirrors live in the child's copy-on-write trace;
+        # ship them back alongside the classic result arrays
+        ftok = np.asarray(eng._ftok_l)
+        tok = np.asarray(eng._tok_l, dtype=np.int32)
     return (k, eng._gidx, eng._done, eng._status, eng._preempted,
-            node.metrics, eng.preemptions)
+            node.metrics, eng.preemptions, ftok, tok)

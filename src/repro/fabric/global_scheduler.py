@@ -103,6 +103,13 @@ class GlobalScheduler:
         self._sched_factory = scheduler_factory
         self._scheds: dict[int, object] = {}
         self.tracker = EWMARateTracker()
+        #: model -> stream occupancy factor (>= 1).  Arrival counts under-
+        #: state a streaming model's true service (the decode tail), so
+        #: demand is scaled into booked-service units before forecasting —
+        #: the same units phase-aware provisioning books node rates in.
+        #: Empty = classic req/s forecasting.
+        self.stream_occupancy = dict(
+            getattr(cfg, "stream_occupancy", None) or {})
         self._prev_obs: dict[str, float] = {}
         #: model -> consecutive epochs its deficit stayed over threshold
         self._starved: dict[str, int] = {}
@@ -150,6 +157,9 @@ class GlobalScheduler:
         observe at the boundary — no node internals, no future.
         """
         cfg = self.cfg
+        if self.stream_occupancy:
+            occ = self.stream_occupancy
+            demand = {m: r * occ.get(m, 1.0) for m, r in demand.items()}
         ewma = self.tracker.update(dict(demand))
         target = predict_target(ewma, demand, self._prev_obs)
         self._prev_obs = dict(demand)

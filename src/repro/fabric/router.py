@@ -168,7 +168,8 @@ class FabricRouter:
                  shed_level: int = 2,
                  affinity_weights: dict[int, float] | None = None,
                  rate_window_ms: float = 5_000.0,
-                 dag_colocation: bool = True):
+                 dag_colocation: bool = True,
+                 stream_occupancy: dict[str, float] | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"one of {sorted(POLICIES)}")
@@ -186,6 +187,11 @@ class FabricRouter:
         #: critical-path-aware stage placement (see module docstring);
         #: off = stage-oblivious dispatch, the fig_dag contrast arm
         self.dag_colocation = dag_colocation
+        #: model -> stream occupancy factor (>= 1): how much busier one
+        #: mean stream keeps a gpu-let than the single launch the fluid
+        #: view books.  Empty = phase-oblivious routing (every stream
+        #: charged as one opaque launch), the fig_streaming contrast arm.
+        self.stream_occupancy = dict(stream_occupancy or {})
         self._loads = [_NodeLoad(n) for n in nodes]
         self._load_by_node_id = {ld.node.node_id: ld for ld in self._loads}
         self._fanout_l: list[int] | None = None   # per-row child count
@@ -268,6 +274,11 @@ class FabricRouter:
         if trace.has_stages:
             # per-request parent lookups (co-location, node stamping)
             # don't collapse to a single clear-time heap
+            return False
+        if trace.has_streams:
+            # decode tails make per-dispatch occupancy model-dependent
+            # (phase-aware routing weights it per model), breaking the
+            # single clear-time-increment collapse
             return False
         if self.shed_level < self.reroute_level:
             return False            # shed implies re-route eligibility
@@ -482,6 +493,9 @@ class FabricRouter:
         sent_d: list[float] = []
         has_stages = trace.has_stages
         colocate = has_stages and self.dag_colocation
+        # phase-aware streaming: weight each dispatch's booked occupancy
+        # by the model's decode-tail factor (empty map = oblivious arm)
+        occ = self.stream_occupancy if trace.has_streams else None
         if has_stages:
             node_col = trace.node_id
             npar_list = trace.n_parents[order].tolist()
@@ -530,7 +544,10 @@ class FabricRouter:
             if d > 0.0:
                 sent_ids.append(oid[k])
                 sent_d.append(d)
-            ld.backlog_ms += node.service_ms(m)
+            svc = node.service_ms(m)
+            if occ:
+                svc *= occ.get(m, 1.0)
+            ld.backlog_ms += svc
             if track_rates:
                 ld.note(m, t, self.rate_window_ms)
             node.pending_idx.append(oid[k])

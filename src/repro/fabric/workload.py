@@ -17,9 +17,10 @@ from collections.abc import Mapping
 
 import numpy as np
 
+from repro.core.latency import AnalyticGPULatency, LatencyProvider
 from repro.core.profiles import ModelProfile
 from repro.core.scenarios import (DagScenario, FabricScenario,
-                                  critical_path_budgets)
+                                  StreamScenario, critical_path_budgets)
 from repro.fabric.fabric import FabricConfig, ServingFabric
 from repro.fabric.priority import draw_priorities
 from repro.simulator.events import PoissonArrivals, Request
@@ -72,6 +73,110 @@ def build_trace(scn: FabricScenario,
                 horizon_s: float, seed: int = 0) -> list[Request]:
     """Object-edge variant of :func:`build_trace_soa` (same trace)."""
     return build_trace_soa(scn, profiles, horizon_s, seed).to_requests()
+
+
+def build_stream_trace_soa(scn: StreamScenario,
+                           profiles: Mapping[str, ModelProfile],
+                           horizon_s: float, seed: int = 0,
+                           lat: LatencyProvider | None = None
+                           ) -> RequestTrace:
+    """Materialize a :class:`StreamScenario` into a *streaming* trace.
+
+    Arrivals come from the classic builder over the wrapped scenario
+    (same rng consumption, same stable merge — a streaming trace with
+    all-default specs arrives exactly like its classic twin); then
+    per-model geometric prompt/output lengths are drawn (a separate,
+    seed-derived rng so arrival times are untouched) and the phase SLOs
+    attached.  Each row's ``slo_ms`` becomes the derived end-to-end
+    deadline ``ttft + output_len * tpot``.
+    """
+    trace = build_trace_soa(scn.base, profiles, horizon_s, seed)
+    n = len(trace)
+    lat = lat or AnalyticGPULatency()
+    rng = np.random.default_rng(seed + 2)
+    plen = np.ones(n, dtype=np.int32)
+    olen = np.ones(n, dtype=np.int32)
+    ttft = np.empty(n)
+    tpot = np.empty(n)
+    for mid, m in enumerate(trace.models):
+        mask = trace.model_id == mid
+        k = int(mask.sum())
+        if not k:
+            continue
+        sp = scn.spec(m)
+        prof = profiles[m]
+        plen[mask] = np.minimum(
+            rng.geometric(min(1.0 / max(sp.prompt_mean, 1.0), 1.0), k),
+            sp.prompt_max).astype(np.int32)
+        olen[mask] = np.minimum(
+            rng.geometric(min(1.0 / max(sp.output_mean, 1.0), 1.0), k),
+            sp.output_max).astype(np.int32)
+        ttft[mask] = (prof.slo_ms if sp.ttft_slo_ms is None
+                      else sp.ttft_slo_ms)
+        tpot[mask] = sp.tpot_scale * lat.decode_step_ms(prof, 8, 1.0)
+    trace.attach_streams(plen, olen, ttft, tpot)
+    trace.slo_ms = ttft + olen * tpot
+    return trace
+
+
+def stream_occupancies(scn: StreamScenario,
+                       profiles: Mapping[str, ModelProfile],
+                       lat: LatencyProvider | None = None
+                       ) -> dict[str, float]:
+    """Per-model stream occupancy factors (>= 1) at the scenario's specs.
+
+    The factor is how much busier one mean stream keeps a gpu-let than
+    the single L(b, p) launch a phase-oblivious provisioner books — the
+    decode tail's worth of extra service.  Phase-aware placement scales
+    each model's booked rate by it.
+
+    The decode amortization batch is bounded by the concurrency the
+    model can actually sustain on one node (per-node rate times the
+    decode lifetime at SLO cadence): a low-rate model's pool holds one
+    or two streams, so its decode steps run near-solo even when the
+    TPOT-feasible cap is large.
+    """
+    lat = lat or AnalyticGPULatency()
+    occ = {}
+    for m, rate in scn.rates.items():
+        if m not in profiles:
+            continue
+        sp = scn.spec(m)
+        prof = profiles[m]
+        otok = min(sp.output_mean, sp.output_max)
+        tpot = sp.tpot_scale * lat.decode_step_ms(prof, 8, 1.0)
+        conc = (rate / max(scn.n_nodes, 1)) * \
+            max(otok - 1.0, 0.0) * tpot / 1e3
+        occ[m] = lat.stream_occupancy(
+            prof, 1.0, min(sp.prompt_mean, sp.prompt_max), otok, tpot,
+            decode_concurrency=max(conc, 1.0))
+    return occ
+
+
+def build_stream_fabric(scn: StreamScenario,
+                        profiles: Mapping[str, ModelProfile],
+                        cfg: FabricConfig | None = None,
+                        phase_aware: bool = True,
+                        lat: LatencyProvider | None = None,
+                        **build_kwargs) -> ServingFabric:
+    """Provision a fabric for a streaming scenario.
+
+    ``phase_aware=False`` books the raw stream rates — the scheduler
+    sees each stream as one opaque L(b, p) launch, so the decode tail
+    steals cycle time it never provisioned for.  ``phase_aware=True``
+    scales each model's booked rate by its stream occupancy (decode
+    work counted) and hands the router the same factors so its backlog
+    estimates weight streaming models by their true service.
+    """
+    rates = dict(scn.rates)
+    occ = None
+    if phase_aware:
+        occ = stream_occupancies(scn, profiles, lat)
+        rates = {m: r * occ.get(m, 1.0) for m, r in rates.items()}
+    cfg = cfg or FabricConfig()
+    cfg.stream_occupancy = occ
+    return ServingFabric.build(profiles, scn.n_nodes, rates, cfg=cfg,
+                               **build_kwargs)
 
 
 def build_dag_trace_soa(scn: DagScenario,

@@ -2,11 +2,13 @@
 from repro.simulator.cluster import SimConfig, simulate_schedule
 from repro.simulator.engine import EngineConfig, EventHeapEngine
 from repro.simulator.events import PoissonArrivals, Request
-from repro.simulator.metrics import (JobMetrics, SimMetrics, collect_jobs,
+from repro.simulator.metrics import (JobMetrics, SimMetrics, StreamMetrics,
+                                     collect_jobs, collect_streams,
                                      collect_trace, window_metrics)
 from repro.simulator.trace import RequestTrace, RequestView
 
 __all__ = ["EngineConfig", "EventHeapEngine", "JobMetrics",
            "PoissonArrivals", "Request", "RequestTrace", "RequestView",
-           "SimConfig", "SimMetrics", "collect_jobs", "collect_trace",
-           "simulate_schedule", "window_metrics"]
+           "SimConfig", "SimMetrics", "StreamMetrics", "collect_jobs",
+           "collect_streams", "collect_trace", "simulate_schedule",
+           "window_metrics"]

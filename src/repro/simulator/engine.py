@@ -111,6 +111,11 @@ class EngineConfig:
     #: batch/drop/preempt — switch off for multi-million-request sweeps
     #: where the log would dominate memory.  Metrics are unaffected.
     event_log: bool = True
+    #: streaming traces: max tokens one decode chunk advances each live
+    #: stream before membership is re-examined — the continuous-batching
+    #: granularity.  Smaller = new prefills join the pool sooner (better
+    #: TTFT under load), larger = fewer simulator events.
+    decode_quantum: int = 8
 
 
 class _IdxQueue:
@@ -180,7 +185,7 @@ class _LetRt:
     __slots__ = ("let", "idx", "partner", "duty", "walk_order", "queues",
                  "qlist", "cycle_start", "t", "slot", "inflight", "pending",
                  "idle_floor", "gen", "inflight_reqs", "inflight_prio",
-                 "busy", "epoch", "frac", "latcache")
+                 "busy", "epoch", "frac", "latcache", "dstreams", "dlat")
 
     def __init__(self, let, idx: int, epoch: int):
         self.let = let
@@ -213,6 +218,11 @@ class _LetRt:
         #: (model id, batch size) -> interference-free exec ms; the memo
         #: call per launch is measurable at millions of batches
         self.latcache: dict[tuple[int, int], float] = {}
+        #: streaming only: model id -> decode pool, a FIFO of
+        #: ``[local_id, remaining_tokens]`` entries for streams past
+        #: prefill; and a (model id, pool size) -> step-ms cache
+        self.dstreams: dict[int, list] = {}
+        self.dlat: dict[tuple[int, int], float] = {}
 
 
 #: tick subscriber: (t_ms, observed_rates_req_s, engine) -> new schedule|None
@@ -273,6 +283,15 @@ class EventHeapEngine:
         self._mid_l: list[int] = []
         self._pri_l: list[int] = []
         self._prof_by_mid: list[ModelProfile | None] = []
+        # streaming mirrors (bound only when trace.has_streams)
+        self._streams_on = False
+        self._plen_l: list[int] = []
+        self._olen_l: list[int] = []
+        self._ttft_l: list[float] = []
+        self._tpot_l: list[float] = []
+        self._ftok_l: list[float] = []
+        self._tok_l: list[int] = []
+        self._tpot_by_mid: list[float] = []
         # hoisted config flags (read per routed request)
         self._preempt_on = self.cfg.preemption
         self._log_on = self.cfg.event_log
@@ -364,6 +383,25 @@ class EventHeapEngine:
         self._preempted_l: list[bool] = [False] * n
         self._done = self._status = self._preempted = None
         self._prof_by_mid = [self.profiles.get(m) for m in tr.models]
+        self._streams_on = bool(tr.has_streams)
+        if self._streams_on:
+            if (self.on_tick is not None or self._apply_plan
+                    or self._pending_schedule is not None):
+                raise ValueError(
+                    "streaming traces do not support mid-run reschedules")
+            g = self._gidx
+            self._plen_l = tr.prompt_len[g].tolist()
+            self._olen_l = tr.output_len[g].tolist()
+            self._ttft_l = tr.ttft_slo_ms[g].tolist()
+            self._tpot_l = tr.tpot_slo_ms[g].tolist()
+            self._ftok_l = [np.nan] * n
+            self._tok_l = [0] * n
+            # tightest per-model TPOT: the decode slot's EDF key and the
+            # cadence the decode batch cap must hold
+            tp = np.full(len(tr.models), np.inf)
+            if n:
+                np.minimum.at(tp, self._mid, tr.tpot_slo_ms[g])
+            self._tpot_by_mid = tp.tolist()
         self._bound = True
         # the schedule was installed before the vocab existed: bind it now
         self._bind_schedule()
@@ -382,6 +420,10 @@ class EventHeapEngine:
         tr.completion_ms[g] = self._done
         tr.status[g] = self._status
         tr.preempted[g] |= self._preempted
+        if self._streams_on:
+            tr.first_token_ms[g] = np.asarray(self._ftok_l,
+                                              dtype=np.float64)
+            tr.tokens_done[g] = np.asarray(self._tok_l, dtype=np.int32)
         if self._pending_objs:
             tr.write_back(self._pending_objs)
 
@@ -468,6 +510,33 @@ class EventHeapEngine:
                 rt.walk_order.append((a, cap, mid, prof,
                                       rt.queues.get(mid)))
                 offset = max(offset, a.est_latency_ms)
+            if self._streams_on:
+                # interleave one decode slot per served model, the whole
+                # walk EDF-ordered by token-deadline slack: a decode
+                # slot's key is the model's tightest TPOT (ties break
+                # decode-first), a prefill slot's its TTFT-read SLO.
+                # Decode slots carry ``assignment=None`` / ``queue=None``
+                # and a pool-size cap holding the TPOT cadence.
+                merged = [(e[3].slo_ms, 1, e) for e in rt.walk_order]
+                seen: set[int] = set()
+                for e in rt.walk_order:
+                    mid = e[2]
+                    if mid < 0 or mid in seen or e[4] is None:
+                        continue
+                    seen.add(mid)
+                    prof = e[3]
+                    tpot = self._tpot_by_mid[mid]
+                    dcap = (self.memo.max_decode_batch(prof, let.frac,
+                                                       tpot)
+                            if tpot < np.inf else 0)
+                    if dcap <= 0:
+                        dcap = 1   # run solo; SLO misses surface in TPOT
+                    merged.append((tpot, 0, (None, dcap, mid, prof,
+                                             None)))
+                merged.sort(key=lambda m: (m[0], m[1]))
+                rt.walk_order = [m[2] for m in merged]
+                rt.dstreams = {}
+                rt.dlat = {}
             rt.qlist = list(rt.queues.values())
 
     def _route(self, i: int) -> None:
@@ -559,6 +628,8 @@ class EventHeapEngine:
         teardown still fits the SLO, and (c) the remaining execution is
         longer than the teardown itself.
         """
+        if rt.inflight_reqs is None:
+            return   # streaming decode chunk: no cheap requeue, runs out
         _mid, _b, _start, done = rt.inflight
         remaining = done - self.now
         cost = self.cfg.preempt_cost_ms
@@ -592,6 +663,19 @@ class EventHeapEngine:
             done_l[i] = np.nan
             status_l[i] = PENDING
             pre_l[i] = True
+        if self._streams_on:
+            # a cancelled prefill never emitted its first token: unwind
+            # the launch-time stamps and pull the batch back out of the
+            # decode pool it had just joined
+            ftok_l, tok_l = self._ftok_l, self._tok_l
+            for i in batch:
+                ftok_l[i] = np.nan
+                tok_l[i] = 0
+            dm = rt.dstreams.get(mid)
+            if dm:
+                member = set(batch)
+                rt.dstreams[mid] = [e for e in dm
+                                    if e[0] not in member]
         rt.queues[mid].requeue_front_of_class(
             batch, [pri_l[i] for i in batch])
         self.preemptions += 1
@@ -604,7 +688,7 @@ class EventHeapEngine:
         rt.slot = 0
         if first_mid is not None:
             for k, entry in enumerate(rt.walk_order):
-                if entry[2] == first_mid:
+                if entry[2] == first_mid and entry[0] is not None:
                     rt.slot = k
                     break
         rt.cycle_start = rt.t = self.now + cost
@@ -625,7 +709,12 @@ class EventHeapEngine:
         typical single-digit batch sizes this beats both object
         attribute-chasing and per-batch numpy dispatch by an order of
         magnitude.
+
+        Streaming traces divert to :meth:`_walk_stream` here — the one
+        branch the classic path pays for the phase machinery.
         """
+        if self._streams_on:
+            return self._walk_stream(rt)
         walk = rt.walk_order
         n = len(walk)
         if n == 0:
@@ -744,6 +833,254 @@ class EventHeapEngine:
                 for i in batch:
                     done_l[i] = done
                     status_l[i] = COMPLETED
+            rt.inflight = (mid, nb, t, done)
+            rt.inflight_reqs = batch
+            rt.pending = True
+            rt.busy += exec_ms
+            if log is not None:
+                log.append(("batch", self.epoch, rt.idx, t, done,
+                            model, nb))
+            rt.t = done
+            rt.slot = slot
+            rt.cycle_start = cycle_start
+            self._seq += 1
+            heapq.heappush(self._heap,
+                           (done, COMPLETE, self._seq,
+                            self.epoch, rt.idx, rt.gen))
+            return
+
+    def _walk_stream(self, rt: _LetRt) -> None:
+        """Streaming duty-cycle walker: continuous batching.
+
+        Same fused scalar structure as :meth:`_walk`, with the request
+        lifecycle split into phases:
+
+        * **prefill slots** form batches exactly like classic slots but
+          admit against the TTFT SLO (queueing past ``ttft_slo_ms``
+          drops the stream), cost ``prefill_ms`` at the batch's padded
+          (power-of-two bucketed) prompt length, stamp
+          ``first_token_ms`` at launch, and feed surviving streams into
+          the model's *decode pool* instead of completing them;
+        * **decode slots** run one chunk — up to ``decode_quantum``
+          tokens, clipped so no member overshoots its last token — over
+          the pool's current membership.  Membership is re-examined
+          every chunk: streams that just finished prefill join, streams
+          that emit their last token leave mid-flight and are stamped
+          completed at the chunk's launch.  That is continuous batching;
+          the batch never waits for a "slot boundary".
+
+        The walk order is EDF on token-deadline slack (decode slots keyed
+        by the model's tightest TPOT, prefill slots by TTFT), and a
+        cycle with a live decode pool never idles or paces — chunks run
+        back-to-back with prefill slots interleaved between them.
+        """
+        walk = rt.walk_order
+        n = len(walk)
+        if n == 0:
+            return
+        arr_l = self._arr_l
+        ttft_l = self._ttft_l
+        done_l = self._done_l
+        status_l = self._status_l
+        ftok_l = self._ftok_l
+        tok_l = self._tok_l
+        olen_l = self._olen_l
+        plen_l = self._plen_l
+        quantum = self.cfg.decode_quantum
+        log = self.log if self._log_on else None
+        t = rt.t
+        slot = rt.slot
+        cycle_start = rt.cycle_start
+        while True:
+            if slot >= n:
+                nxt = cycle_start + rt.duty
+                if t > nxt:
+                    nxt = t
+                for a, _cap, _mid, _prof, q in walk:
+                    if q is not None:
+                        h = q.head
+                        buf = q.buf
+                        b0 = a.batch
+                        if len(buf) - h >= b0 \
+                                and arr_l[buf[h + b0 - 1]] <= t:
+                            nxt = cycle_start + 1e-3
+                            if t > nxt:
+                                nxt = t
+                            break
+                live = False
+                for dm in rt.dstreams.values():
+                    if dm:
+                        live = True
+                        break
+                if live:
+                    # decode work in the pool: next cycle immediately
+                    cycle_start = t
+                    slot = 0
+                    continue
+                arr = None
+                for q in rt.qlist:
+                    if q.head < len(q.buf):
+                        a2 = arr_l[q.buf[q.head]]
+                        if arr is None or a2 < arr:
+                            arr = a2
+                if arr is None:
+                    rt.idle_floor = nxt
+                    rt.t = t
+                    rt.slot = slot
+                    rt.cycle_start = cycle_start
+                    return  # idle: a routed arrival will _kick us
+                cycle_start = arr if arr > nxt else nxt
+                slot = 0
+                if cycle_start > t + 1e-9:
+                    t = cycle_start
+                if cycle_start > self.now + 1e-9:
+                    rt.pending = True
+                    rt.t = t
+                    rt.slot = slot
+                    rt.cycle_start = cycle_start
+                    self._seq += 1
+                    heapq.heappush(self._heap,
+                                   (cycle_start, WAKE, self._seq,
+                                    self.epoch, rt.idx, 0))
+                    return
+                continue
+            a, cap, mid, prof, q = walk[slot]
+            slot += 1
+            if a is None:
+                # ---- decode chunk over the model's pool ----
+                dm = rt.dstreams.get(mid)
+                if not dm:
+                    continue
+                if len(dm) > cap:
+                    batch = dm[:cap]   # oldest streams hold cadence first
+                    rest = dm[cap:]
+                else:
+                    batch = dm
+                    rest = []
+                nb = len(batch)
+                k = quantum
+                for e in batch:
+                    if e[1] < k:
+                        k = e[1]
+                lkey = (mid, nb)
+                step = rt.dlat.get(lkey)
+                if step is None:
+                    step = rt.dlat[lkey] = self.memo.decode_step_ms(
+                        prof, nb, rt.frac)
+                partner = rt.partner
+                if partner is not None and partner.inflight is not None:
+                    exec_ms = self._intf(rt, mid, nb, t) * step * k
+                else:
+                    exec_ms = step * k
+                done = t + exec_ms
+                keep = []
+                for e in batch:
+                    i = e[0]
+                    tok_l[i] += k
+                    if e[1] == k:
+                        done_l[i] = done
+                        status_l[i] = COMPLETED
+                    else:
+                        e[1] -= k
+                        keep.append(e)
+                keep.extend(rest)
+                rt.dstreams[mid] = keep
+                rt.inflight = (mid, nb, t, done)
+                rt.inflight_reqs = None   # chunks are not preemptible
+                rt.inflight_prio = -1
+                rt.pending = True
+                rt.busy += exec_ms
+                if log is not None:
+                    log.append(("decode", self.epoch, rt.idx, t, done,
+                                prof.name, nb, k))
+                rt.t = done
+                rt.slot = slot
+                rt.cycle_start = cycle_start
+                self._seq += 1
+                heapq.heappush(self._heap,
+                               (done, COMPLETE, self._seq,
+                                self.epoch, rt.idx, rt.gen))
+                return
+            if q is None:
+                continue
+            # ---- prefill batch formation (TTFT-admitted) ----
+            buf = q.buf
+            qn = len(buf)
+            h = q.head
+            if h == qn:
+                continue
+            model = a.model
+            batch = []
+            nb = 0
+            ptok = 1
+            while h < qn:
+                i = buf[h]
+                ai = arr_l[i]
+                if ai > t:
+                    break
+                h += 1
+                if t - ai > ttft_l[i]:
+                    status_l[i] = DROPPED
+                    if log is not None:
+                        log.append(("drop", t, model))
+                    continue
+                batch.append(i)
+                nb += 1
+                pl = plen_l[i]
+                if pl > ptok:
+                    ptok = pl
+                if nb == cap:
+                    break
+            q.head = h
+            if h > 64 and 2 * h >= qn:
+                del buf[:h]
+                del q.pri[:h]
+                q.head = 0
+            if not nb:
+                continue
+            # pad the batch to its longest prompt, bucketed to a power
+            # of two so the latency cache stays small
+            bucket = 1 << (ptok - 1).bit_length()
+            lkey = (mid, nb, bucket)
+            base = rt.latcache.get(lkey)
+            if base is None:
+                base = rt.latcache[lkey] = self.memo.prefill_ms(
+                    prof, nb, rt.frac, bucket)
+            partner = rt.partner
+            if partner is not None and partner.inflight is not None:
+                exec_ms = self._intf(rt, mid, nb, t) * base
+            else:
+                exec_ms = base
+            done = t + exec_ms
+            dm = rt.dstreams.get(mid)
+            if dm is None:
+                dm = rt.dstreams[mid] = []
+            if self._preempt_on:
+                pri_l = self._pri_l
+                mp = pri_l[batch[0]]
+                for i in batch:
+                    ftok_l[i] = done
+                    tok_l[i] = 1
+                    rem = olen_l[i] - 1
+                    if rem:
+                        dm.append([i, rem])
+                    else:
+                        done_l[i] = done
+                        status_l[i] = COMPLETED
+                    p = pri_l[i]
+                    if p < mp:
+                        mp = p
+                rt.inflight_prio = mp
+            else:
+                for i in batch:
+                    ftok_l[i] = done
+                    tok_l[i] = 1
+                    rem = olen_l[i] - 1
+                    if rem:
+                        dm.append([i, rem])
+                    else:
+                        done_l[i] = done
+                        status_l[i] = COMPLETED
             rt.inflight = (mid, nb, t, done)
             rt.inflight_reqs = batch
             rt.pending = True
@@ -971,8 +1308,28 @@ class EventHeapEngine:
                     status_l[j] = UNSERVED
                     if log is not None:
                         log.append(("drop", self.now, models[mid_l[j]]))
+        self._sweep_pools()
         self._scatter_back()
         return self.metrics()
+
+    def _sweep_pools(self) -> None:
+        """Conservation for streams cut off mid-decode (drain clock ran
+        out): anything still in a decode pool is an UNSERVED drop."""
+        if not self._streams_on:
+            return
+        status_l, mid_l = self._status_l, self._mid_l
+        models = self.trace.models
+        log = self.log if self._log_on else None
+        for rt in self.lets:
+            for dm in rt.dstreams.values():
+                for e in dm:
+                    j = e[0]
+                    if status_l[j] == PENDING:
+                        status_l[j] = UNSERVED
+                        if log is not None:
+                            log.append(("drop", self.now,
+                                        models[mid_l[j]]))
+                dm.clear()
 
     # ---- incremental serving (fabric release-frontier epochs) -------------
     #
@@ -1013,6 +1370,13 @@ class EventHeapEngine:
         self._done_l.extend([np.nan] * k)
         self._status_l.extend([PENDING] * k)
         self._preempted_l.extend([False] * k)
+        if self._streams_on:
+            self._plen_l.extend(tr.prompt_len[g].tolist())
+            self._olen_l.extend(tr.output_len[g].tolist())
+            self._ttft_l.extend(tr.ttft_slo_ms[g].tolist())
+            self._tpot_l.extend(tr.tpot_slo_ms[g].tolist())
+            self._ftok_l.extend([np.nan] * k)
+            self._tok_l.extend([0] * k)
         self._n += k
 
     def run_until(self, t_stop: float) -> None:
@@ -1126,6 +1490,7 @@ class EventHeapEngine:
                     status_l[j] = UNSERVED
                     if log is not None:
                         log.append(("drop", self.now, models[mid_l[j]]))
+        self._sweep_pools()
         if self._late_chunks:
             self._gidx = np.concatenate([self._gidx] + self._late_chunks)
             self._late_chunks = []

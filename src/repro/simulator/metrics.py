@@ -17,6 +17,16 @@ import numpy as np
 
 from repro.simulator.events import Request
 
+#: percentile levels reported everywhere a latency distribution reduces
+PCT_LEVELS = (50, 95, 99)
+
+
+def _pcts(values: np.ndarray) -> dict:
+    """{"p50", "p95", "p99"} of ``values`` (empty -> zeros)."""
+    if values.size == 0:
+        return {f"p{q}": 0.0 for q in PCT_LEVELS}
+    return {f"p{q}": float(np.percentile(values, q)) for q in PCT_LEVELS}
+
 
 @dataclasses.dataclass
 class SimMetrics:
@@ -31,6 +41,10 @@ class SimMetrics:
     #: preempted); single-class traces collapse to one level-0 entry.
     per_class: dict = dataclasses.field(default_factory=dict)
     busy_ms_per_gpulet: dict = dataclasses.field(default_factory=dict)
+    #: model -> {"p50", "p95", "p99"} latency percentiles over completed
+    #: requests (kept out of ``per_model`` so pre-existing golden records
+    #: stay byte-identical)
+    latency_ms_per_model: dict = dataclasses.field(default_factory=dict)
 
     def class_violation_rate(self, level: int) -> float:
         pc = self.per_class.get(level)
@@ -134,6 +148,11 @@ def collect_arrays(models: list[str], model_id: np.ndarray,
             total=int(tot_m[k]), violations=int(viol_m[k]),
             dropped=int(drop_m[k]), completed=int(done_m[k]),
             preempted=int(pre_m[k]))
+    if m.completed:
+        lat = completion_ms[done_mask] - arrival_ms[done_mask]
+        lat_mid = mid[done_mask]
+        for k in np.unique(lat_mid).tolist():
+            m.latency_ms_per_model[models[k]] = _pcts(lat[lat_mid == k])
     levels, inv = np.unique(priority, return_inverse=True)
     nl = len(levels)
     tot_c = np.bincount(inv, minlength=nl)
@@ -226,10 +245,106 @@ def collect_jobs(trace) -> JobMetrics | None:
     return m
 
 
+@dataclasses.dataclass
+class StreamMetrics:
+    """Phase-level accounting for streaming (prefill/decode) traces.
+
+    TTFT is measured from the pristine arrival to the first-token stamp;
+    a stream *attains* its TTFT SLO when that gap is within
+    ``ttft_slo_ms``.  TPOT is the realized steady cadence of a completed
+    stream — ``(completion - first_token) / (output_len - 1)`` — so it
+    reflects decode-pool contention, not the admission-time estimate.
+    Dropped or unserved streams count against TTFT attainment (they
+    never produced a first token).
+    """
+
+    streams: int = 0
+    completed: int = 0            # emitted their full output_len
+    ttft_attained: int = 0        # first token within ttft_slo_ms
+    tokens_done: int = 0
+    tokens_requested: int = 0
+    ttft_ms: dict = dataclasses.field(default_factory=dict)   # p50/p95/p99
+    tpot_ms: dict = dataclasses.field(default_factory=dict)   # p50/p95/p99
+    #: model -> {"streams", "completed", "ttft_attainment", "ttft_ms",
+    #: "tpot_ms"}
+    per_model: dict = dataclasses.field(default_factory=dict)
+    #: priority level -> same shape as ``per_model``
+    per_class: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ttft_attainment(self) -> float:
+        return self.ttft_attained / self.streams if self.streams else 1.0
+
+    @property
+    def token_completion(self) -> float:
+        return (self.tokens_done / self.tokens_requested
+                if self.tokens_requested else 1.0)
+
+
+def collect_streams(trace, idx: np.ndarray | None = None
+                    ) -> StreamMetrics | None:
+    """Reduce a streaming trace's rows into TTFT/TPOT metrics.
+
+    Vectorized like :func:`collect_arrays` (masked reductions, one
+    percentile pass per model/class group).  Returns None for traces
+    without stream columns.
+    """
+    from repro.simulator.trace import COMPLETED
+    if not getattr(trace, "has_streams", False):
+        return None
+    if idx is None:
+        idx = np.arange(len(trace), dtype=np.int64)
+    arrival = trace.arrival_ms[idx]
+    first = trace.first_token_ms[idx]
+    done = trace.completion_ms[idx]
+    status = trace.status[idx]
+    olen = trace.output_len[idx].astype(np.float64)
+    ttft_slo = trace.ttft_slo_ms[idx]
+    mid = trace.model_id[idx]
+    pri = trace.priority[idx]
+    n = idx.size
+
+    m = StreamMetrics(streams=int(n))
+    if n == 0:
+        return m
+    got_first = ~np.isnan(first)
+    ttft = np.where(got_first, first - arrival, np.inf)
+    attained = got_first & (ttft <= ttft_slo)
+    completed = status == COMPLETED
+    multi = completed & (olen > 1)
+    tpot = np.zeros(n)
+    tpot[multi] = (done[multi] - first[multi]) / (olen[multi] - 1.0)
+
+    m.completed = int(completed.sum())
+    m.ttft_attained = int(attained.sum())
+    m.tokens_done = int(trace.tokens_done[idx].sum())
+    m.tokens_requested = int(trace.output_len[idx].sum())
+    m.ttft_ms = _pcts(ttft[got_first])
+    m.tpot_ms = _pcts(tpot[multi])
+
+    def group(mask: np.ndarray) -> dict:
+        tot = int(mask.sum())
+        att = int((attained & mask).sum())
+        return {
+            "streams": tot,
+            "completed": int((completed & mask).sum()),
+            "ttft_attainment": att / tot if tot else 1.0,
+            "ttft_ms": _pcts(ttft[got_first & mask]),
+            "tpot_ms": _pcts(tpot[multi & mask]),
+        }
+
+    for k in np.unique(mid).tolist():
+        m.per_model[trace.models[k]] = group(mid == k)
+    for lv in np.unique(pri).tolist():
+        m.per_class[int(lv)] = group(pri == lv)
+    return m
+
+
 def collect(requests: list[Request], horizon_ms: float,
             busy_ms: dict | None = None) -> SimMetrics:
     m = SimMetrics(horizon_ms=horizon_ms)
     m.busy_ms_per_gpulet = busy_ms or {}
+    lat_by: dict[str, list[float]] = {}
     for r in requests:
         m.total += 1
         pm = m.per_model.setdefault(
@@ -256,8 +371,12 @@ def collect(requests: list[Request], horizon_ms: float,
             m.completed += 1
             pm["completed"] += 1
             pc["completed"] += 1
+            lat_by.setdefault(r.model, []).append(
+                r.completion_ms - r.arrival_ms)
             if r.violated:
                 m.slo_violations += 1
                 pm["violations"] += 1
                 pc["violations"] += 1
+    for model, lats in lat_by.items():
+        m.latency_ms_per_model[model] = _pcts(np.asarray(lats))
     return m

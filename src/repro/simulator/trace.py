@@ -49,6 +49,21 @@ row range (jobs are laid out contiguously in topological order), and
 completions)`` and only then feeds them into dispatch.  Traces *without*
 stage columns (``has_stages`` False) take the exact PR-5 code path —
 byte-identical results, pinned by the golden suite.
+
+Stream columns (prefill/decode phases)
+--------------------------------------
+A trace can instead carry *streaming* columns (:meth:`attach_streams`),
+turning each row into a generative request: a prefill over
+``prompt_len`` tokens that emits the first token, then a decode stream
+producing ``output_len`` tokens total.  ``ttft_slo_ms`` bounds
+time-to-first-token (the queueing+prefill deadline), ``tpot_slo_ms``
+bounds the steady per-token cadence; the row's ``slo_ms`` is the derived
+end-to-end deadline (``ttft + output_len * tpot``) so the existing
+violation/latency machinery keeps meaning.  The engine stamps
+``first_token_ms`` at prefill launch and advances ``tokens_done`` per
+decode chunk; ``completion_ms`` remains the last-token stamp.  Traces
+*without* stream columns (``has_streams`` False) take the exact
+pre-streaming path — byte-identical results, same guarantee as stages.
 """
 from __future__ import annotations
 
@@ -82,7 +97,9 @@ class RequestTrace:
                  "model_id", "priority", "completion_ms", "status",
                  "preempted", "job_id", "stage_id", "parent_start",
                  "n_parents", "slo_budget_ms", "job_slo_ms",
-                 "job_arrival_ms", "node_id", "_edges")
+                 "job_arrival_ms", "node_id", "_edges", "prompt_len",
+                 "output_len", "ttft_slo_ms", "tpot_slo_ms",
+                 "first_token_ms", "tokens_done")
 
     def __init__(self, models: Sequence[str], arrival_ms: np.ndarray,
                  slo_ms: np.ndarray, model_id: np.ndarray,
@@ -118,6 +135,15 @@ class RequestTrace:
         self.job_arrival_ms = None    # float64 pristine job arrival
         self.node_id = None           # int32 dispatch stamp; -1 = none
         self._edges = None
+        # stream columns stay None for classic one-shot traces — every
+        # consumer checks ``has_streams`` before touching them, so the
+        # classic path never pays for (or observes) phase machinery.
+        self.prompt_len = None        # int32 prefill tokens
+        self.output_len = None        # int32 total generated tokens (>= 1)
+        self.ttft_slo_ms = None       # float64 time-to-first-token SLO
+        self.tpot_slo_ms = None       # float64 per-output-token SLO
+        self.first_token_ms = None    # float64 first-token stamp; NaN = none
+        self.tokens_done = None       # int32 tokens generated so far
 
     def __len__(self) -> int:
         return len(self.arrival_ms)
@@ -189,6 +215,48 @@ class RequestTrace:
             parent = np.repeat(self.parent_start, np_) + within
             self._edges = (child, parent)
         return self._edges
+
+    # ---- streaming (prefill/decode) columns -------------------------------
+
+    @property
+    def has_streams(self) -> bool:
+        """True if this trace carries prefill/decode stream columns."""
+        return self.prompt_len is not None
+
+    def attach_streams(self, prompt_len: np.ndarray,
+                       output_len: np.ndarray, ttft_slo_ms: np.ndarray,
+                       tpot_slo_ms: np.ndarray) -> None:
+        """Attach streaming columns, making each row a generative stream.
+
+        ``output_len`` counts *all* generated tokens including the one
+        emitted by prefill, so ``output_len == 1`` degenerates to a
+        prefill-only request.  The builder is expected to set the row's
+        ``slo_ms`` to the derived end-to-end deadline
+        (``ttft_slo_ms + output_len * tpot_slo_ms``); this method does
+        not overwrite it so callers can tighten or loosen deliberately.
+        Stream and stage columns are mutually exclusive — the engine's
+        continuous-batching walk has no release frontier.
+        """
+        n = len(self)
+        cols = (prompt_len, output_len, ttft_slo_ms, tpot_slo_ms)
+        if any(len(c) != n for c in cols):
+            raise ValueError("stream columns must match trace length")
+        if self.has_stages:
+            raise ValueError("stream and stage columns are exclusive")
+        prompt_len = np.asarray(prompt_len, dtype=np.int32)
+        output_len = np.asarray(output_len, dtype=np.int32)
+        if n and ((prompt_len < 1).any() or (output_len < 1).any()):
+            raise ValueError("prompt_len and output_len must be >= 1")
+        ttft = np.asarray(ttft_slo_ms, dtype=np.float64)
+        tpot = np.asarray(tpot_slo_ms, dtype=np.float64)
+        if n and ((ttft <= 0).any() or (tpot <= 0).any()):
+            raise ValueError("TTFT/TPOT SLOs must be positive")
+        self.prompt_len = prompt_len
+        self.output_len = output_len
+        self.ttft_slo_ms = ttft
+        self.tpot_slo_ms = tpot
+        self.first_token_ms = np.full(n, np.nan)
+        self.tokens_done = np.zeros(n, dtype=np.int32)
 
     # ---- construction -----------------------------------------------------
 
@@ -392,6 +460,18 @@ class RequestView:
     @property
     def preempted(self) -> bool:
         return bool(self._t.preempted[self._i])
+
+    @property
+    def first_token_ms(self) -> float | None:
+        if not self._t.has_streams:
+            return None
+        v = float(self._t.first_token_ms[self._i])
+        return None if v != v else v
+
+    @property
+    def tokens_done(self) -> int:
+        return (int(self._t.tokens_done[self._i])
+                if self._t.has_streams else 0)
 
     @property
     def latency_ms(self) -> float | None:
