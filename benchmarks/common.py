@@ -18,6 +18,55 @@ def setup():
     return profs_t, intf, intf_stats
 
 
+# ---- observability plumbing (--trace-dir) ---------------------------------
+
+#: destination for lifecycle/telemetry artifacts; None = tracing off
+#: (the default — benchmarks pay zero observability overhead)
+_TRACE_DIR: str | None = None
+
+
+def set_trace_dir(path: str | None) -> None:
+    """Enable SLO-forensics export for subsequent benchmark runs."""
+    global _TRACE_DIR
+    if path:
+        os.makedirs(path, exist_ok=True)
+    _TRACE_DIR = path or None
+
+
+def trace_dir() -> str | None:
+    return _TRACE_DIR
+
+
+def add_trace_dir_arg(ap) -> None:
+    ap.add_argument(
+        "--trace-dir", default=None, metavar="DIR",
+        help="export per-request lifecycle traces, fleet time-series "
+             "JSONL, SLO-miss attribution, and a Chrome/Perfetto trace "
+             "per run into DIR (see repro.obs)")
+
+
+def maybe_attach_timeline(trace):
+    """Attach an obs timeline when --trace-dir is active.
+
+    Must run before dispatch: the timeline snapshots pristine
+    arrival/SLO columns.  Returns ``trace`` for chaining.
+    """
+    if _TRACE_DIR is not None:
+        from repro.obs import attach_timeline
+        attach_timeline(trace)
+    return trace
+
+
+def maybe_dump_run(label: str, trace, nodes, horizon_ms: float,
+                   migration_events=()) -> dict | None:
+    """Write the run's obs artifacts into the active trace dir, if any."""
+    if _TRACE_DIR is None or getattr(trace, "obs", None) is None:
+        return None
+    from repro.obs import dump_run
+    return dump_run(_TRACE_DIR, label, trace, nodes, horizon_ms,
+                    migration_events=migration_events)
+
+
 def make_schedulers(profiles, intf):
     return {
         "sbp": SquishyBinPacking(profiles),

@@ -28,7 +28,9 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, merge_bench_json, setup
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup)
 from repro.core.scenarios import mixed_dag_scenario
 from repro.fabric import FabricConfig
 from repro.fabric.network import NetworkModel
@@ -60,12 +62,16 @@ def _cfg(colocation: bool) -> FabricConfig:
 
 
 def _serve(scn, profs, colocation: bool, horizon_s: float,
-           seed: int) -> dict:
+           seed: int, label: str | None = None) -> dict:
     t0 = time.perf_counter()
     trace = build_dag_trace_soa(scn, profs, horizon_s, seed=seed)
+    maybe_attach_timeline(trace)
     fabric = build_dag_fabric(scn, profs, _cfg(colocation))
     fm = fabric.serve_trace(trace)
     wall_s = time.perf_counter() - t0
+    if label:
+        maybe_dump_run(label, trace, fabric.nodes,
+                       fabric.cfg.horizon_ms)
     f, j = fm.fleet, fm.jobs
     return {
         "requests": f.total,
@@ -88,8 +94,10 @@ def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
     """Serve the same staged trace with and without co-location."""
     profs, _intf, _ = setup()
     scn = mixed_dag_scenario(n_nodes, slo_scale=SLO_SCALE)
-    aware = _serve(scn, profs, True, horizon_s, seed)
-    obliv = _serve(scn, profs, False, horizon_s, seed)
+    aware = _serve(scn, profs, True, horizon_s, seed,
+                   label=f"dag_{n_nodes}n_colocated")
+    obliv = _serve(scn, profs, False, horizon_s, seed,
+                   label=f"dag_{n_nodes}n_oblivious")
     return {
         "n_nodes": n_nodes,
         "horizon_s": horizon_s,
@@ -133,7 +141,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="3-node CI smoke: conservation + attainment bars")
+    add_trace_dir_arg(ap)
     args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
     if not args.tiny:
         for row in run():
             print(row.csv())

@@ -20,7 +20,9 @@ import dataclasses
 import os
 import time
 
-from benchmarks.common import Row, merge_bench_json, setup
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup, trace_dir)
 from repro.core.scenarios import fabric_node_sweep
 from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
                           build_trace_soa)
@@ -51,10 +53,17 @@ def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
         t0 = time.perf_counter()
         fabric = build_fabric(scn, profs, cfg)
         for node in fabric.nodes:
-            node.cfg = dataclasses.replace(node.cfg, event_log=False)
+            # span records stay off on the hot path unless --trace-dir
+            # asked for a Perfetto export of this run
+            node.cfg = dataclasses.replace(node.cfg,
+                                           event_log=trace_dir() is not None)
         trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+        maybe_attach_timeline(trace)
         fm = fabric.serve_trace(trace)
         wall_s = time.perf_counter() - t0
+        maybe_dump_run(f"fabric_scaling_{scn.n_nodes}n", trace,
+                       fabric.nodes, horizon_s * 1e3,
+                       migration_events=fm.migration_events)
         per_class = {}
         for level, pc in sorted(fm.fleet.per_class.items()):
             per_class[CLASS_NAMES.get(level, str(level))] = {
@@ -77,6 +86,10 @@ def run_sweep(node_counts=NODE_COUNTS, horizon_s=HORIZON_S,
             "preemptions": fm.preemptions,
             "shed": {str(k): v for k, v in fm.stats.shed.items()},
             "rerouted": {str(k): v for k, v in fm.stats.rerouted.items()},
+            "rerouted_total": fm.rerouted_total(),
+            "handed_back": fm.handed_back,
+            "failed_over": fm.failed_over,
+            "lost": fm.lost_total(),
             "wall_s": wall_s,
         })
     return out
@@ -122,7 +135,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="2-node 2-model CI smoke")
+    add_trace_dir_arg(ap)
     args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
     if not args.tiny:
         for row in run():
             print(row.csv())

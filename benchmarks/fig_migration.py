@@ -26,7 +26,9 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, merge_bench_json, setup
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup)
 from repro.core.scenarios import drifting_zipf_scenario
 from repro.fabric import FabricConfig, build_fabric, build_trace_soa
 from repro.fabric.priority import CLASS_NAMES
@@ -57,12 +59,17 @@ def _cfg(migrations: bool, horizon_s: float,
         node_workers=os.cpu_count() or 1)
 
 
-def _serve(scn, profs, cfg, horizon_s: float, seed: int) -> dict:
+def _serve(scn, profs, cfg, horizon_s: float, seed: int,
+           label: str | None = None) -> dict:
     t0 = time.perf_counter()
     fabric = build_fabric(scn, profs, cfg)
     trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    maybe_attach_timeline(trace)
     fm = fabric.serve_trace(trace)
     wall_s = time.perf_counter() - t0
+    if label:
+        maybe_dump_run(label, trace, fabric.nodes, cfg.horizon_ms,
+                       migration_events=fm.migration_events)
     per_class = {}
     for level, pc in sorted(fm.fleet.per_class.items()):
         per_class[CLASS_NAMES.get(level, str(level))] = {
@@ -93,8 +100,10 @@ def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
     profs, _intf, _ = setup()
     scn = drifting_zipf_scenario(n_nodes, horizon_s=horizon_s,
                                  n_phases=N_PHASES, skew=skew, util=util)
-    base = _serve(scn, profs, _cfg(False, horizon_s), horizon_s, seed)
-    mig = _serve(scn, profs, _cfg(True, horizon_s), horizon_s, seed)
+    base = _serve(scn, profs, _cfg(False, horizon_s), horizon_s, seed,
+                  label=f"migration_{n_nodes}n_reroute_only")
+    mig = _serve(scn, profs, _cfg(True, horizon_s), horizon_s, seed,
+                 label=f"migration_{n_nodes}n_migration")
     return {
         "n_nodes": n_nodes,
         "horizon_s": horizon_s,
@@ -144,7 +153,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="3-node CI smoke: conservation + migration win")
+    add_trace_dir_arg(ap)
     args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
     if not args.tiny:
         for row in run():
             print(row.csv())

@@ -29,7 +29,9 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, merge_bench_json, setup
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup)
 from repro.core.scenarios import streaming_zipf_scenario
 from repro.fabric import FabricConfig
 from repro.fabric.workload import (build_stream_fabric,
@@ -56,15 +58,19 @@ SEED = 7
 TINY_ATTAINMENT_FLOOR = 0.90
 
 
-def _serve(scn, profs, aware: bool, horizon_s: float, seed: int) -> dict:
+def _serve(scn, profs, aware: bool, horizon_s: float, seed: int,
+           label: str | None = None) -> dict:
     t0 = time.perf_counter()
     trace = build_stream_trace_soa(scn, profs, horizon_s, seed=seed)
+    maybe_attach_timeline(trace)
     fabric = build_stream_fabric(
         scn, profs, cfg=FabricConfig(horizon_ms=horizon_s * 1e3),
         phase_aware=aware)
     fm = fabric.serve_trace(trace)
     sm = collect_streams(trace)
     wall_s = time.perf_counter() - t0
+    if label:
+        maybe_dump_run(label, trace, fabric.nodes, horizon_s * 1e3)
     f = fm.fleet
     return {
         "streams": sm.streams,
@@ -89,8 +95,10 @@ def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
     """Serve the same streaming trace with and without phase awareness."""
     profs, _intf, _ = setup()
     scn = streaming_zipf_scenario(n_nodes, util=UTIL)
-    aware = _serve(scn, profs, True, horizon_s, seed)
-    obliv = _serve(scn, profs, False, horizon_s, seed)
+    aware = _serve(scn, profs, True, horizon_s, seed,
+                   label=f"streaming_{n_nodes}n_phase_aware")
+    obliv = _serve(scn, profs, False, horizon_s, seed,
+                   label=f"streaming_{n_nodes}n_oblivious")
     return {
         "n_nodes": n_nodes,
         "horizon_s": horizon_s,
@@ -136,7 +144,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="3-node CI smoke: conservation + TTFT bars")
+    add_trace_dir_arg(ap)
     args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
     if not args.tiny:
         for row in run():
             print(row.csv())

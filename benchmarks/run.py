@@ -31,11 +31,15 @@ MODULES = [
 
 
 def main() -> int:
+    from benchmarks.common import add_trace_dir_arg, set_trace_dir
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    add_trace_dir_arg(ap)
     args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
 
     print("name,us_per_call,derived")
     failed = 0

@@ -16,6 +16,13 @@
 #   ./run.sh python -m benchmarks.run            # full benchmark suite
 #   ./run.sh python -m benchmarks.bench_engine   # perf ladder
 #   ./run.sh python -m pytest -x -q              # tier-1
+#
+# SLO forensics (lifecycle traces + fleet telemetry + miss attribution):
+#   ./run.sh python -m benchmarks.run --trace-dir traces/
+#   ./run.sh python -m benchmarks.fig_fabric_scaling --tiny --trace-dir traces/
+#   ./run.sh python -m repro.obs.validate traces/   # schema check
+# Open the *.trace.json files in https://ui.perfetto.dev (or
+# chrome://tracing); see src/repro/fabric/README.md for the span schema.
 set -euo pipefail
 cd "$(dirname "$0")"
 

@@ -29,6 +29,8 @@ from repro.core.profiles import ModelProfile
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.router import DispatchStats, FabricRouter
+from repro.obs.timeline import (CAUSE_DROP_PARENT, CAUSE_DROP_REPLAY,
+                                CAUSE_DROP_SHUTDOWN)
 from repro.simulator.engine import EngineConfig
 from repro.simulator.events import Request
 from repro.simulator.metrics import (JobMetrics, SimMetrics, collect_jobs,
@@ -149,8 +151,24 @@ class FabricMetrics:
     def violation_rate(self) -> float:
         return self.fleet.violation_rate
 
+    @property
+    def handed_back(self) -> int:
+        """Requests re-dispatched after a migration stranded them."""
+        return self.stats.handed_back
+
+    @property
+    def failed_over(self) -> int:
+        """Requests replayed on survivors after a node failure."""
+        return self.stats.failed_over
+
     def shed_total(self) -> int:
         return sum(self.stats.shed.values())
+
+    def rerouted_total(self) -> int:
+        return sum(self.stats.rerouted.values())
+
+    def lost_total(self) -> int:
+        return sum(self.stats.lost.values())
 
 
 class ServingFabric:
@@ -353,12 +371,23 @@ class ServingFabric:
         drops immediately."""
         arr = trace.arrival_ms
         t_replay = np.maximum(arr[lost], t_floor_ms) + lag_ms
-        new_slo = trace.slo_ms[lost] - (t_replay - arr[lost])
+        burn = t_replay - arr[lost]
+        new_slo = trace.slo_ms[lost] - burn
         trace.slo_ms[lost] = new_slo
         arr[lost] = t_replay
         hopeless = new_slo <= 0.0
         # already hopeless: count the loss
         trace.status[lost[hopeless]] = DROPPED
+        ob = trace.obs
+        if ob is not None:
+            # the old node's launch stamps died with it: clear them so
+            # replay wait is charged to migration/failover, not preemption
+            ob.reset_rows(lost)
+            ob.charge_replay(lost, burn, handback)
+            hp = lost[hopeless]
+            if len(hp):
+                ob.resolve_ms[hp] = t_replay[hopeless]
+                ob.cause[hp] = CAUSE_DROP_REPLAY
         replay = lost[~hopeless]
         if len(replay):
             self.replayed_ids.append(replay)
@@ -460,6 +489,9 @@ class ServingFabric:
         if len(left):
             trace.status[left] = UNSERVED
             self._dag_unreleased[left] = False
+            if trace.obs is not None:
+                trace.obs.resolve_ms[left] = max_clock
+                trace.obs.cause[left] = CAUSE_DROP_SHUTDOWN
         fleet = collect_trace(trace, horizon)
         per_node = {n.node_id: n.metrics for n in self.nodes
                     if n.metrics is not None}
@@ -487,6 +519,7 @@ class ServingFabric:
         """
         status = trace.status
         npar = trace.n_parents
+        ob = trace.obs
         un = self._dag_unreleased
         child, parent = self._dag_edges
         n = len(trace)
@@ -511,6 +544,9 @@ class ServingFabric:
             if failed.size:
                 status[failed] = DROPPED
                 un[failed] = False
+                if ob is not None:
+                    ob.resolve_ms[failed] = t_now
+                    ob.cause[failed] = CAUSE_DROP_PARENT
             if ready.size:
                 ps = trace.parent_start[ready]
                 kk = npar[ready].astype(np.int64)
@@ -596,11 +632,16 @@ class ServingFabric:
             live_backlogs = [backlogs[j]
                              for j, n in enumerate(self.nodes)
                              if n.alive_at(t1)]
+            ob = trace.obs
             for u in gs.on_epoch(t1, demand, live_obs, live_backlogs,
                                  horizon - t1):
                 self.nodes[u.node_id].apply_update(
                     u.t_cut_ms, u.t_apply_ms, u.schedule, u.added,
                     u.removed)
+                if ob is not None:
+                    ob.fleet_log.append(
+                        ("migration", u.t_cut_ms, u.node_id,
+                         len(u.added), len(u.removed)))
         self.migration_events = list(gs.events)
 
     def _run_donors(self, trace: RequestTrace) -> None:
@@ -645,8 +686,8 @@ class ServingFabric:
                 ctx = multiprocessing.get_context("fork")
                 with ctx.Pool(w) as pool:
                     for (k, gidx, done, status, preempted, met,
-                         preempts, ftok, tok) in pool.map(_run_node_job,
-                                                          ks):
+                         preempts, ftok, tok, spans,
+                         obs_pack) in pool.map(_run_node_job, ks):
                         node = self.nodes[k]
                         trace.completion_ms[gidx] = done
                         trace.status[gidx] = status
@@ -654,8 +695,13 @@ class ServingFabric:
                         if ftok is not None:
                             trace.first_token_ms[gidx] = ftok
                             trace.tokens_done[gidx] = tok
+                        if obs_pack is not None:
+                            # node-side timeline columns were stamped in
+                            # the child's copy-on-write view; merge them
+                            trace.obs.unpack_rows(gidx, obs_pack)
                         node.metrics = met
                         node.preemptions = preempts
+                        node.span_log = spans
             finally:
                 _PAR_NODES = None
             return
@@ -679,5 +725,7 @@ def _run_node_job(k: int):
         # ship them back alongside the classic result arrays
         ftok = np.asarray(eng._ftok_l)
         tok = np.asarray(eng._tok_l, dtype=np.int32)
+    tl = node.trace.obs
+    obs_pack = tl.pack_rows(eng._gidx) if tl is not None else None
     return (k, eng._gidx, eng._done, eng._status, eng._preempted,
-            node.metrics, eng.preemptions, ftok, tok)
+            node.metrics, eng.preemptions, ftok, tok, eng.log, obs_pack)

@@ -63,6 +63,10 @@ class FabricNode:
         #: preemption count when the engine ran in a forked worker (the
         #: parent has no engine object then)
         self.preemptions = 0
+        #: this node's typed span records (engine ``log``), captured after
+        #: the run so observability export works even when the engine ran
+        #: in a forked worker; empty unless ``EngineConfig.event_log``
+        self.span_log: list = []
         #: set by the fabric once this node has executed (failed nodes run
         #: first); the router must not dispatch anything more to it.
         self.retired = False
@@ -225,6 +229,7 @@ class FabricNode:
         self.engine.submit_trace(
             self.trace, np.asarray(self.pending_idx, dtype=np.int64))
         self.metrics = self.engine.run()
+        self.span_log = self.engine.log
         return self.metrics
 
     # ---- incremental execution (DAG release-frontier epochs) ---------------
@@ -257,6 +262,7 @@ class FabricNode:
     def finish_stream(self) -> SimMetrics:
         """Drain the incremental engine and collect this node's metrics."""
         self.metrics = self.engine.finish()
+        self.span_log = self.engine.log
         return self.metrics
 
     def casualties(self) -> np.ndarray:

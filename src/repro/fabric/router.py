@@ -98,6 +98,7 @@ import numpy as np
 
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode
+from repro.obs.timeline import CAUSE_LOST, CAUSE_SHED
 from repro.simulator.trace import LOST, SHED, RequestTrace
 
 #: floor for the node-side SLO after subtracting network round-trip
@@ -333,6 +334,8 @@ class FabricRouter:
         const_delay = not net_zero and jitter_ms <= 0.0
         shed_thresh = self.shed_backlog_ms
         shed_level = self.shed_level
+        ob = trace.obs
+        rlog = ob.router_log if ob is not None else None
         t = 0.0
         for k in range(len(oid)):
             t = arr_list[k]
@@ -369,6 +372,9 @@ class FabricRouter:
             tag[nid] += 1
             heappush(busy, (cnew, nid, tag[nid]))
             pend[nid].append(oid[k])
+            if rlog is not None:
+                # fast-path precondition: node_id == heap index
+                rlog.append((t, nid, (cnew - t) * s))
             if not net_zero and not const_delay:
                 # per-send draw keeps the rng stream identical to the
                 # object path (block pre-draws would over-consume)
@@ -387,6 +393,10 @@ class FabricRouter:
                 stats.dispatched[nid] = \
                     stats.dispatched.get(nid, 0) + len(node_pend)
                 loads[i].node.pending_idx.extend(node_pend)
+                if ob is not None:
+                    sid = np.asarray(node_pend, dtype=np.int64)
+                    ob.t_dispatch_ms[sid] = trace.arrival_ms[sid]
+                    ob.node[sid] = nid
         if failover:
             stats.failed_over += sum(len(p) for p in pend)
         for p, cnt in shed_by_class.items():
@@ -397,8 +407,14 @@ class FabricRouter:
                 if node_pend:
                     sid = np.asarray(node_pend, dtype=np.int64)
                     trace.arrival_ms[sid] += d
-                    trace.slo_ms[sid] = np.maximum(
+                    new = np.maximum(
                         trace.slo_ms[sid] - 2.0 * d, MIN_NODE_SLO_MS)
+                    if ob is not None:
+                        # actual post-floor shrink, so net_ms + migration
+                        # burns always equal slo0 - slo exactly
+                        ob.t_dispatch_ms[sid] += d
+                        ob.net_ms[sid] += trace.slo_ms[sid] - new
+                    trace.slo_ms[sid] = new
             self._apply_trace_updates(trace, shed_ids, [], [], [])
         else:
             self._apply_trace_updates(trace, shed_ids, [], sent_ids,
@@ -493,6 +509,7 @@ class FabricRouter:
         sent_d: list[float] = []
         has_stages = trace.has_stages
         colocate = has_stages and self.dag_colocation
+        ob = trace.obs
         # phase-aware streaming: weight each dispatch's booked occupancy
         # by the model's decode-tail factor (empty map = oblivious arm)
         occ = self.stream_occupancy if trace.has_streams else None
@@ -553,6 +570,10 @@ class FabricRouter:
             node.pending_idx.append(oid[k])
             if has_stages:
                 node_col[oid[k]] = node.node_id
+            if ob is not None:
+                ob.t_dispatch_ms[oid[k]] = t
+                ob.node[oid[k]] = node.node_id
+                ob.router_log.append((t, node.node_id, ld.backlog_ms))
             stats.count(stats.dispatched, node.node_id)
             if failover:
                 stats.failed_over += 1
@@ -565,16 +586,30 @@ class FabricRouter:
     def _apply_trace_updates(trace: RequestTrace, shed_ids: list[int],
                              lost_ids: list[int], sent_ids: list[int],
                              sent_d: list[float]) -> None:
+        ob = trace.obs
         if shed_ids:
-            trace.status[np.asarray(shed_ids, dtype=np.int64)] = SHED
+            sid = np.asarray(shed_ids, dtype=np.int64)
+            trace.status[sid] = SHED
+            if ob is not None:
+                ob.resolve_ms[sid] = trace.arrival_ms[sid]
+                ob.cause[sid] = CAUSE_SHED
         if lost_ids:
-            trace.status[np.asarray(lost_ids, dtype=np.int64)] = LOST
+            sid = np.asarray(lost_ids, dtype=np.int64)
+            trace.status[sid] = LOST
+            if ob is not None:
+                ob.resolve_ms[sid] = trace.arrival_ms[sid]
+                ob.cause[sid] = CAUSE_LOST
         if sent_ids:
             sid = np.asarray(sent_ids, dtype=np.int64)
             d = np.asarray(sent_d)
             trace.arrival_ms[sid] += d
-            trace.slo_ms[sid] = np.maximum(trace.slo_ms[sid] - 2.0 * d,
-                                           MIN_NODE_SLO_MS)
+            new = np.maximum(trace.slo_ms[sid] - 2.0 * d, MIN_NODE_SLO_MS)
+            if ob is not None:
+                # actual post-floor shrink: keeps net_ms + handback_ms +
+                # failover_ms == slo0_ms - slo_ms an exact identity
+                ob.t_dispatch_ms[sid] += d
+                ob.net_ms[sid] += trace.slo_ms[sid] - new
+            trace.slo_ms[sid] = new
 
 
 POLICIES: tuple[str, ...] = ("least-loaded", "slo-headroom",

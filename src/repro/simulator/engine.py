@@ -62,6 +62,10 @@ from repro.core.interference import true_interference_factors
 from repro.core.latency import LatencyMemo, LatencyProvider
 from repro.core.profiles import ModelProfile
 from repro.core.scheduler_base import ScheduleResult
+from repro.obs.spans import (ApplySpan, BatchSpan, DecodeSpan, DropSpan,
+                             PreemptSpan, TickSpan)
+from repro.obs.timeline import (CAUSE_COMPLETED, CAUSE_DROP_DEADLINE,
+                                CAUSE_DROP_SHUTDOWN)
 from repro.simulator.events import Request
 from repro.simulator.metrics import SimMetrics, collect_arrays
 from repro.simulator.trace import COMPLETED, DROPPED, PENDING, UNSERVED, \
@@ -258,8 +262,10 @@ class EventHeapEngine:
         self._targets: dict[int, list[list]] = {}
         self.unrouted: dict[int, _IdxQueue] = {}
         self.busy_ms: dict[tuple[int, int], float] = {}
-        #: compact event log: ("batch", epoch, let_idx, launch, done, model,
-        #: n) / ("drop", t, model) / ("apply", t) / ("tick", t, resched)
+        #: compact event log of typed span records (repro.obs.spans):
+        #: BatchSpan / DecodeSpan / DropSpan / PreemptSpan / ApplySpan /
+        #: TickSpan.  Records are NamedTuples with the historical field
+        #: order, so positional consumers (e[0] == "batch") still work.
         self.log: list[tuple] = []
         self.ticks: list[tuple[float, bool]] = []
         #: per-window observed arrival counts (flushed at each TICK and at
@@ -292,6 +298,14 @@ class EventHeapEngine:
         self._ftok_l: list[float] = []
         self._tok_l: list[int] = []
         self._tpot_by_mid: list[float] = []
+        # observability mirrors (bound only when trace.obs is attached)
+        self._tl_on = False
+        self._tlf_l: list[float] = []   # first launch
+        self._tll_l: list[float] = []   # last (surviving) launch
+        self._tli_l: list[float] = []   # surviving-launch interference
+        self._tld_l: list[float] = []   # accumulated decode interference
+        self._tlr_l: list[float] = []   # resolve stamp (drops)
+        self._tlc_l: list[int] = []     # cause code
         # hoisted config flags (read per routed request)
         self._preempt_on = self.cfg.preemption
         self._log_on = self.cfg.event_log
@@ -402,6 +416,18 @@ class EventHeapEngine:
             if n:
                 np.minimum.at(tp, self._mid, tr.tpot_slo_ms[g])
             self._tpot_by_mid = tp.tolist()
+        # lifecycle timeline mirrors: local fresh columns (replayed rows
+        # were reset by the fabric before re-dispatch, so starting from
+        # NaN/0 matches the timeline's current state for our rows) that
+        # scatter back into trace.obs at the end of the run.
+        self._tl_on = tr.obs is not None
+        if self._tl_on:
+            self._tlf_l = [np.nan] * n
+            self._tll_l = [np.nan] * n
+            self._tli_l = [0.0] * n
+            self._tld_l = [0.0] * n
+            self._tlr_l = [np.nan] * n
+            self._tlc_l = [0] * n
         self._bound = True
         # the schedule was installed before the vocab existed: bind it now
         self._bind_schedule()
@@ -424,6 +450,24 @@ class EventHeapEngine:
             tr.first_token_ms[g] = np.asarray(self._ftok_l,
                                               dtype=np.float64)
             tr.tokens_done[g] = np.asarray(self._tok_l, dtype=np.int32)
+        if self._tl_on:
+            tl = tr.obs
+            tl.first_launch_ms[g] = np.asarray(self._tlf_l,
+                                               dtype=np.float64)
+            tl.last_launch_ms[g] = np.asarray(self._tll_l,
+                                              dtype=np.float64)
+            tl.intf_ms[g] = np.asarray(self._tli_l, dtype=np.float64)
+            tl.decode_intf_ms[g] = np.asarray(self._tld_l,
+                                              dtype=np.float64)
+            # completed rows close at their completion stamp; everything
+            # else closed at its drop decision (stamped in the walk/sweeps)
+            res = np.asarray(self._tlr_l, dtype=np.float64)
+            cau = np.asarray(self._tlc_l, dtype=np.uint8)
+            comp = self._status == COMPLETED
+            res[comp] = self._done[comp]
+            cau[comp] = CAUSE_COMPLETED
+            tl.resolve_ms[g] = res
+            tl.cause[g] = cau
         if self._pending_objs:
             tr.write_back(self._pending_objs)
 
@@ -680,8 +724,8 @@ class EventHeapEngine:
             batch, [pri_l[i] for i in batch])
         self.preemptions += 1
         if self._log_on:
-            self.log.append(("preempt", self.now, rt.idx,
-                             self.trace.models[mid], b))
+            self.log.append(PreemptSpan("preempt", self.now, rt.idx,
+                                        self.trace.models[mid], b))
         rt.inflight = None
         rt.inflight_reqs = None
         rt.gen += 1               # the pending COMPLETE event is now stale
@@ -724,6 +768,11 @@ class EventHeapEngine:
         done_l = self._done_l
         status_l = self._status_l
         log = self.log if self._log_on else None
+        if self._tl_on:
+            tlf_l, tll_l, tli_l = self._tlf_l, self._tll_l, self._tli_l
+            tlr_l, tlc_l = self._tlr_l, self._tlc_l
+        else:
+            tlf_l = tll_l = tli_l = tlr_l = tlc_l = None
         t = rt.t                      # local mirrors of the walker clock
         slot = rt.slot
         cycle_start = rt.cycle_start
@@ -794,8 +843,11 @@ class EventHeapEngine:
                 h += 1
                 if t - ai > slo_l[i]:
                     status_l[i] = DROPPED
+                    if tlr_l is not None:
+                        tlr_l[i] = t
+                        tlc_l[i] = CAUSE_DROP_DEADLINE
                     if log is not None:
-                        log.append(("drop", t, model))
+                        log.append(DropSpan("drop", t, model))
                     continue
                 batch.append(i)
                 nb += 1
@@ -833,13 +885,20 @@ class EventHeapEngine:
                 for i in batch:
                     done_l[i] = done
                     status_l[i] = COMPLETED
+            if tlf_l is not None:
+                extra = exec_ms - base
+                for i in batch:
+                    if tlf_l[i] != tlf_l[i]:   # NaN: first-ever launch
+                        tlf_l[i] = t
+                    tll_l[i] = t
+                    tli_l[i] = extra
             rt.inflight = (mid, nb, t, done)
             rt.inflight_reqs = batch
             rt.pending = True
             rt.busy += exec_ms
             if log is not None:
-                log.append(("batch", self.epoch, rt.idx, t, done,
-                            model, nb))
+                log.append(BatchSpan("batch", self.epoch, rt.idx, t, done,
+                                     model, nb))
             rt.t = done
             rt.slot = slot
             rt.cycle_start = cycle_start
@@ -888,6 +947,11 @@ class EventHeapEngine:
         plen_l = self._plen_l
         quantum = self.cfg.decode_quantum
         log = self.log if self._log_on else None
+        if self._tl_on:
+            tlf_l, tll_l, tli_l = self._tlf_l, self._tll_l, self._tli_l
+            tld_l, tlr_l, tlc_l = self._tld_l, self._tlr_l, self._tlc_l
+        else:
+            tlf_l = tll_l = tli_l = tld_l = tlr_l = tlc_l = None
         t = rt.t
         slot = rt.slot
         cycle_start = rt.cycle_start
@@ -985,14 +1049,19 @@ class EventHeapEngine:
                         keep.append(e)
                 keep.extend(rest)
                 rt.dstreams[mid] = keep
+                if tld_l is not None:
+                    extra = exec_ms - step * k
+                    if extra:
+                        for e2 in batch:
+                            tld_l[e2[0]] += extra
                 rt.inflight = (mid, nb, t, done)
                 rt.inflight_reqs = None   # chunks are not preemptible
                 rt.inflight_prio = -1
                 rt.pending = True
                 rt.busy += exec_ms
                 if log is not None:
-                    log.append(("decode", self.epoch, rt.idx, t, done,
-                                prof.name, nb, k))
+                    log.append(DecodeSpan("decode", self.epoch, rt.idx, t,
+                                          done, prof.name, nb, k))
                 rt.t = done
                 rt.slot = slot
                 rt.cycle_start = cycle_start
@@ -1021,8 +1090,11 @@ class EventHeapEngine:
                 h += 1
                 if t - ai > ttft_l[i]:
                     status_l[i] = DROPPED
+                    if tlr_l is not None:
+                        tlr_l[i] = t
+                        tlc_l[i] = CAUSE_DROP_DEADLINE
                     if log is not None:
-                        log.append(("drop", t, model))
+                        log.append(DropSpan("drop", t, model))
                     continue
                 batch.append(i)
                 nb += 1
@@ -1081,13 +1153,20 @@ class EventHeapEngine:
                     else:
                         done_l[i] = done
                         status_l[i] = COMPLETED
+            if tlf_l is not None:
+                extra = exec_ms - base
+                for i in batch:
+                    if tlf_l[i] != tlf_l[i]:   # NaN: first-ever launch
+                        tlf_l[i] = t
+                    tll_l[i] = t
+                    tli_l[i] = extra
             rt.inflight = (mid, nb, t, done)
             rt.inflight_reqs = batch
             rt.pending = True
             rt.busy += exec_ms
             if log is not None:
-                log.append(("batch", self.epoch, rt.idx, t, done,
-                            model, nb))
+                log.append(BatchSpan("batch", self.epoch, rt.idx, t, done,
+                                     model, nb))
             rt.t = done
             rt.slot = slot
             rt.cycle_start = cycle_start
@@ -1133,7 +1212,7 @@ class EventHeapEngine:
         if delay <= 0.0:
             self._install(result)
             if self._log_on:
-                self.log.append(("apply", self.now))
+                self.log.append(ApplySpan("apply", self.now))
             return
         self._pending_schedule = result
         if self.cfg.reorg_policy == "pause":
@@ -1169,7 +1248,7 @@ class EventHeapEngine:
         resched = result is not None
         self.ticks.append((t, resched))
         if self._log_on:
-            self.log.append(("tick", t, resched))
+            self.log.append(TickSpan("tick", t, resched))
         if resched:
             self.apply_schedule(result)
         nxt = t + self.cfg.period_ms
@@ -1275,12 +1354,12 @@ class EventHeapEngine:
                     # staged migration cut (apply_schedule_at)
                     self._install(self._apply_plan[ev[3] - 1])
                     if self._log_on:
-                        self.log.append(("apply", t))
+                        self.log.append(ApplySpan("apply", t))
                 elif self._pending_schedule is not None:
                     self._install(self._pending_schedule)
                     self._pending_schedule = None
                     if self._log_on:
-                        self.log.append(("apply", t))
+                        self.log.append(ApplySpan("apply", t))
             elif kind == TICK:
                 self._handle_tick(t)
         # route any tail arrivals that never got processed (overload
@@ -1300,14 +1379,19 @@ class EventHeapEngine:
         models = self.trace.models
         status_l, mid_l = self._status_l, self._mid_l
         log = self.log if self._log_on else None
+        tlr_l = self._tlr_l if self._tl_on else None
         queues = [q for rt in self.lets for q in rt.queues.values()]
         queues += list(self.unrouted.values())
         for q in queues:
             for j in q.drain():
                 if status_l[j] == PENDING:
                     status_l[j] = UNSERVED
+                    if tlr_l is not None:
+                        tlr_l[j] = self.now
+                        self._tlc_l[j] = CAUSE_DROP_SHUTDOWN
                     if log is not None:
-                        log.append(("drop", self.now, models[mid_l[j]]))
+                        log.append(DropSpan("drop", self.now,
+                                            models[mid_l[j]]))
         self._sweep_pools()
         self._scatter_back()
         return self.metrics()
@@ -1320,15 +1404,19 @@ class EventHeapEngine:
         status_l, mid_l = self._status_l, self._mid_l
         models = self.trace.models
         log = self.log if self._log_on else None
+        tlr_l = self._tlr_l if self._tl_on else None
         for rt in self.lets:
             for dm in rt.dstreams.values():
                 for e in dm:
                     j = e[0]
                     if status_l[j] == PENDING:
                         status_l[j] = UNSERVED
+                        if tlr_l is not None:
+                            tlr_l[j] = self.now
+                            self._tlc_l[j] = CAUSE_DROP_SHUTDOWN
                         if log is not None:
-                            log.append(("drop", self.now,
-                                        models[mid_l[j]]))
+                            log.append(DropSpan("drop", self.now,
+                                                models[mid_l[j]]))
                 dm.clear()
 
     # ---- incremental serving (fabric release-frontier epochs) -------------
@@ -1377,6 +1465,13 @@ class EventHeapEngine:
             self._tpot_l.extend(tr.tpot_slo_ms[g].tolist())
             self._ftok_l.extend([np.nan] * k)
             self._tok_l.extend([0] * k)
+        if self._tl_on:
+            self._tlf_l.extend([np.nan] * k)
+            self._tll_l.extend([np.nan] * k)
+            self._tli_l.extend([0.0] * k)
+            self._tld_l.extend([0.0] * k)
+            self._tlr_l.extend([np.nan] * k)
+            self._tlc_l.extend([0] * k)
         self._n += k
 
     def run_until(self, t_stop: float) -> None:
@@ -1434,12 +1529,12 @@ class EventHeapEngine:
                 if ev[3]:
                     self._install(self._apply_plan[ev[3] - 1])
                     if self._log_on:
-                        self.log.append(("apply", self.now))
+                        self.log.append(ApplySpan("apply", self.now))
                 elif self._pending_schedule is not None:
                     self._install(self._pending_schedule)
                     self._pending_schedule = None
                     if self._log_on:
-                        self.log.append(("apply", self.now))
+                        self.log.append(ApplySpan("apply", self.now))
         self._arr_idx = i
 
     def sync_trace(self) -> None:
@@ -1482,14 +1577,19 @@ class EventHeapEngine:
         models = self.trace.models
         status_l, mid_l = self._status_l, self._mid_l
         log = self.log if self._log_on else None
+        tlr_l = self._tlr_l if self._tl_on else None
         queues = [q for rt in self.lets for q in rt.queues.values()]
         queues += list(self.unrouted.values())
         for q in queues:
             for j in q.drain():
                 if status_l[j] == PENDING:
                     status_l[j] = UNSERVED
+                    if tlr_l is not None:
+                        tlr_l[j] = self.now
+                        self._tlc_l[j] = CAUSE_DROP_SHUTDOWN
                     if log is not None:
-                        log.append(("drop", self.now, models[mid_l[j]]))
+                        log.append(DropSpan("drop", self.now,
+                                            models[mid_l[j]]))
         self._sweep_pools()
         if self._late_chunks:
             self._gidx = np.concatenate([self._gidx] + self._late_chunks)

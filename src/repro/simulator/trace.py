@@ -99,7 +99,7 @@ class RequestTrace:
                  "n_parents", "slo_budget_ms", "job_slo_ms",
                  "job_arrival_ms", "node_id", "_edges", "prompt_len",
                  "output_len", "ttft_slo_ms", "tpot_slo_ms",
-                 "first_token_ms", "tokens_done")
+                 "first_token_ms", "tokens_done", "obs")
 
     def __init__(self, models: Sequence[str], arrival_ms: np.ndarray,
                  slo_ms: np.ndarray, model_id: np.ndarray,
@@ -144,6 +144,10 @@ class RequestTrace:
         self.tpot_slo_ms = None       # float64 per-output-token SLO
         self.first_token_ms = None    # float64 first-token stamp; NaN = none
         self.tokens_done = None       # int32 tokens generated so far
+        # observability timeline (repro.obs.attach_timeline); None = off —
+        # every layer checks ``obs is not None`` once per batch/dispatch,
+        # so the hot path pays a single branch when forensics are off.
+        self.obs = None
 
     def __len__(self) -> int:
         return len(self.arrival_ms)

@@ -1,0 +1,199 @@
+"""Observability layer (ISSUE 8): zero perturbation, causal spans,
+attribution identity, artifact schema.
+
+The load-bearing invariants:
+
+  * **Tracing is inert** — attaching a timeline to a trace changes no
+    serving result: completions, statuses, and metrics are byte-identical
+    to the untraced run of the same seeded scenario.
+  * **Span timelines are causal and conserving** — launch times are
+    monotone, every slice closes at/after it opens, every launched batch
+    instance either completes or is torn down by a preemption, and every
+    request ends with exactly one closing (resolve) stamp.
+  * **Attribution identity** — for every SLO-missed request the five
+    components (queueing / interference / preemption / migration /
+    network) sum to its overshoot within float tolerance, on the
+    acceptance scenario: a seeded 8-node drifting-zipf fleet with
+    migrations, preemption, network delay, and forked node workers.
+  * **Exported artifacts validate** — the Chrome trace, time-series
+    JSONL, and attribution report produced by ``dump_run`` pass the
+    ``repro.obs.validate`` schema gate.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ElasticPartitioning, calibrate_profiles
+from repro.core.scenarios import drifting_zipf_scenario
+from repro.fabric import (FabricConfig, NetworkModel, build_fabric,
+                          build_trace_soa)
+from repro.obs import (CAUSE_COMPLETED, CAUSE_NONE, COMPONENTS,
+                       attach_timeline, attribution_arrays,
+                       collect_attribution, dump_run)
+from repro.obs.validate import validate_dir
+from repro.simulator.engine import EngineConfig, EventHeapEngine
+from repro.simulator.events import Request
+from repro.simulator.trace import COMPLETED, PENDING, RequestTrace
+
+PROFS = calibrate_profiles()
+SCHED = ElasticPartitioning(PROFS).schedule({"goo": 60.0, "res": 60.0})
+
+
+def _drift_fabric(horizon_s=10.0, node_workers=1, seed=0):
+    """The acceptance scenario: 8-node drifting-zipf, everything on."""
+    scn = drifting_zipf_scenario(8, horizon_s=horizon_s, n_phases=3,
+                                 skew=2.4, util=1.1)
+    cfg = FabricConfig(
+        horizon_ms=horizon_s * 1e3, policy="least-loaded",
+        preemption=True, migrations=True, migration_period_ms=2_000.0,
+        max_migrations_per_epoch=4,
+        network=NetworkModel(base_ms=0.5, jitter_ms=0.25, seed=7),
+        node_workers=node_workers)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    return fabric, trace
+
+
+def test_tracing_attached_is_inert():
+    """Same seeded run, with and without a timeline: identical results."""
+    fab_a, trace_a = _drift_fabric()
+    fab_b, trace_b = _drift_fabric()
+    attach_timeline(trace_b)
+    fm_a = fab_a.serve_trace(trace_a)
+    fm_b = fab_b.serve_trace(trace_b)
+    assert np.array_equal(trace_a.status, trace_b.status)
+    assert np.array_equal(trace_a.completion_ms, trace_b.completion_ms,
+                          equal_nan=True)
+    assert np.array_equal(trace_a.arrival_ms, trace_b.arrival_ms)
+    assert fm_a.fleet.completed == fm_b.fleet.completed
+    assert fm_a.fleet.slo_violations == fm_b.fleet.slo_violations
+    assert fm_a.migrations == fm_b.migrations
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=5, max_value=60))
+def test_spans_causally_ordered_and_conserving(seed, n):
+    """Random traffic through a preempting engine: the span log is
+    time-ordered, every slice closes at/after it opens, launched batch
+    instances = completions + preemption teardowns, and every request
+    carries exactly one closing stamp with a cause."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for _ in range(n):
+        t += float(rng.exponential(8.0))
+        m = "goo" if rng.random() < 0.6 else "res"
+        reqs.append(Request(m, t,
+                            PROFS[m].slo_ms * float(rng.uniform(0.5, 2.0)),
+                            priority=int(rng.integers(0, 3))))
+    trace = RequestTrace.from_requests(reqs)
+    tl = attach_timeline(trace)
+    eng = EventHeapEngine(
+        PROFS, EngineConfig(horizon_ms=5_000.0, preemption=True),
+        schedule=SCHED)
+    eng.submit_trace(trace, np.arange(len(trace), dtype=np.int64))
+    met = eng.run()
+
+    launches = [e for e in eng.log if e[0] == "batch"]
+    ts = [e[3] for e in launches]
+    assert ts == sorted(ts), "launches must be time-ordered"
+    assert all(e[4] >= e[3] for e in launches), "done >= launch"
+    n_completed = sum(e[6] for e in launches)
+    n_torn_down = sum(e[4] for e in eng.log if e[0] == "preempt")
+    assert n_completed - n_torn_down == met.completed
+    assert sum(1 for e in eng.log if e[0] == "drop") == met.dropped
+    assert met.completed + met.dropped == met.total == len(trace)
+
+    # timeline closure: one terminal stamp per request, cause set
+    assert not (trace.status == PENDING).any()
+    comp = trace.status == COMPLETED
+    assert (tl.cause[comp] == CAUSE_COMPLETED).all()
+    assert np.allclose(tl.resolve_ms[comp], trace.completion_ms[comp])
+    assert np.isfinite(tl.resolve_ms[~comp]).all()
+    assert (tl.cause[~comp] != CAUSE_NONE).all()
+    assert (tl.cause[~comp] != CAUSE_COMPLETED).all()
+    # launch stamps tile causally
+    fl, ll = tl.first_launch_ms, tl.last_launch_ms
+    have = np.isfinite(fl)
+    assert (np.isfinite(ll) == have).all()
+    assert (fl[have] <= ll[have] + 1e-9).all()
+    assert (fl[have] >= tl.arrival0_ms[have] - 1e-9).all()
+    assert np.isfinite(fl[comp]).all()
+
+    # component identity on every miss
+    arrs = attribution_arrays(trace)
+    total = sum(arrs[k] for k in COMPONENTS)
+    miss = arrs["miss"]
+    assert np.allclose(total[miss], arrs["overshoot_ms"][miss], atol=1e-6)
+
+
+def test_attribution_identity_on_drifting_zipf_fleet(tmp_path):
+    """Acceptance: every missed request's components sum to its overshoot
+    on the 8-node drifting-zipf run (migrations + preemption + network +
+    forked node workers), and the exported artifacts validate."""
+    fabric, trace = _drift_fabric(node_workers=2)
+    for node in fabric.nodes:
+        import dataclasses
+        node.cfg = dataclasses.replace(node.cfg, event_log=True)
+    tl = attach_timeline(trace)
+    fm = fabric.serve_trace(trace)
+
+    # SLO-budget burn identity holds exactly, request by request
+    burn = (tl.slo0_ms - trace.slo_ms) \
+        - (tl.net_ms + tl.handback_ms + tl.failover_ms)
+    assert float(np.nanmax(np.abs(burn))) < 1e-9
+    # network delay was actually exercised
+    assert float(tl.net_ms.sum()) > 0.0
+
+    arrs = attribution_arrays(trace)
+    miss = arrs["miss"]
+    assert miss.any(), "the overloaded drift must miss some SLOs"
+    total = sum(arrs[k] for k in COMPONENTS)
+    err = np.abs(total[miss] - arrs["overshoot_ms"][miss])
+    assert float(err.max()) < 1e-6
+
+    report = collect_attribution(trace)
+    assert report["lifecycle"]["closed"] == report["lifecycle"]["terminal"]
+    assert report["identity_max_abs_err_ms"] < 1e-6
+    assert set(report["per_model"]) == set(trace.models)
+    for m, stats in report["per_model"].items():
+        assert stats["missed"] <= stats["total"]
+        if stats["missed"]:
+            assert stats["dominant"], f"{m}: missed but no dominant cause"
+
+    # every node produced span records; export + schema gate
+    assert all(node.span_log for node in fabric.nodes)
+    dump_run(str(tmp_path), "drift", trace, fabric.nodes,
+             fabric.cfg.horizon_ms, migration_events=fm.migration_events)
+    assert validate_dir(str(tmp_path)) == []
+
+
+def test_replay_burn_charged_to_migration_not_preemption():
+    """A failover (or migration hand-back) resets node-side stamps and
+    books its wait under failover/handback, keeping the identity exact
+    for replayed requests too."""
+    from repro.core.scenarios import failure_drain_scenario
+    # failover_ms well under the SLOs so the caught requests survive the
+    # replay instead of dropping as hopeless (same operating point as the
+    # fabric conservation test).
+    scn = failure_drain_scenario(3, fail_at_s=5.0)
+    cfg = FabricConfig(horizon_ms=15_000.0, preemption=True,
+                       failover_ms=10.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, 15.0, seed=7)
+    tl = attach_timeline(trace)
+    fm = fabric.serve_trace(trace)
+    replayed = (np.concatenate(fabric.replayed_ids)
+                if fabric.replayed_ids else np.empty(0, dtype=np.int64))
+    assert len(replayed), "the node death must strand some requests"
+    assert fm.stats.failed_over > 0
+    # every replayed request's wait is booked under failover/handback
+    assert (tl.handback_ms[replayed] + tl.failover_ms[replayed] > 0).all()
+    arrs = attribution_arrays(trace)
+    total = sum(arrs[k] for k in COMPONENTS)
+    miss = arrs["miss"]
+    rm = np.zeros(len(trace), dtype=bool)
+    rm[replayed] = True
+    both = miss & rm
+    assert np.allclose(total[both], arrs["overshoot_ms"][both], atol=1e-6)
+    # the burn surfaces as the migration component, not preemption noise
+    assert (arrs["migration_ms"][both] > 0).any()
