@@ -1,0 +1,189 @@
+"""Naive failover vs the full recovery stack under a fault storm (ISSUE 9).
+
+The same seeded trace and the same seeded fault storm — a transient
+crash (with re-warm), a permanent crash, straggler windows, and a
+degraded-network window with dispatch loss — are served twice per fleet
+size:
+
+  * **naive** — failures drain through a flat legacy-style failover lag
+    (one replay, ``failover_ms`` backoff, no health state): the router
+    keeps dispatching into dead nodes until their RPCs time out, and
+    replays that cannot meet their deadline are dispatched anyway.
+  * **recovery** — the PR-9 stack: EWMA health detection (suspect /
+    evict / probe / reinstate) learned from observed outcomes, deadline-
+    aware retry budgets with exponential backoff (hopeless replays are
+    shed, not replayed), and the brownout ladder shedding bronze first
+    when sustained gold-class miss pressure says the fleet is drowning.
+
+Reports per-class SLO attainment and goodput; the acceptance bar is
+recovery beating naive on gold-class attainment at every fleet size.
+Results merge into ``BENCH_fabric.json`` under the ``"chaos"`` key.
+
+CLI: ``python -m benchmarks.fig_chaos --tiny`` runs a 3-node CI smoke
+and exits non-zero on a conservation break or a recovery loss.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup)
+from repro.core.scenarios import fabric_node_sweep
+from repro.fabric import (FabricConfig, build_fabric, build_trace_soa,
+                          chaos_plan)
+from repro.fabric.priority import CLASS_NAMES
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fabric.json")
+
+HORIZON_S = 20.0
+NODE_COUNTS = (4, 8)
+STORM_SEED = 7
+
+
+def _storm(n_nodes: int, horizon_s: float, seed: int):
+    """One transient + one permanent crash, stragglers and a lossy
+    network window scaled with the fleet."""
+    return chaos_plan(n_nodes, horizon_s * 1e3, seed=seed,
+                      n_transient=max(1, n_nodes // 4),
+                      n_permanent=1,
+                      n_stragglers=max(1, n_nodes // 4),
+                      n_net=1)
+
+
+def _cfg(plan, recovery: bool, horizon_s: float) -> FabricConfig:
+    return FabricConfig(
+        horizon_ms=horizon_s * 1e3, policy="least-loaded",
+        preemption=True, faults=plan, recovery=recovery)
+
+
+def _serve(scn, profs, cfg, horizon_s: float, seed: int,
+           label: str | None = None) -> dict:
+    t0 = time.perf_counter()
+    fabric = build_fabric(scn, profs, cfg)
+    trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    maybe_attach_timeline(trace)
+    fm = fabric.serve_trace(trace)
+    wall_s = time.perf_counter() - t0
+    if label:
+        maybe_dump_run(label, trace, fabric.nodes, cfg.horizon_ms,
+                       migration_events=fm.migration_events)
+    per_class = {}
+    for level, pc in sorted(fm.fleet.per_class.items()):
+        per_class[CLASS_NAMES.get(level, str(level))] = {
+            "total": pc["total"],
+            "violations": pc["violations"],
+            "slo_attainment": 1.0 - pc["violations"] / max(pc["total"], 1),
+        }
+    ch = fm.chaos or {}
+    det = ch.get("detector") or {}
+    brown = ch.get("brownout") or {}
+    return {
+        "requests": fm.fleet.total,
+        "completed": fm.fleet.completed,
+        "dropped": fm.fleet.dropped,
+        "conserved": fm.fleet.completed + fm.fleet.dropped
+        == fm.fleet.total,
+        "goodput_req_s": fm.goodput_req_s,
+        "violation_rate": fm.violation_rate,
+        "per_class": per_class,
+        "retries": ch.get("retries", 0),
+        "retry_drops": ch.get("retry_drops", 0),
+        "net_lost": ch.get("net_lost", 0),
+        "health_events": det.get("events", []),
+        "brownout_events": brown.get("events", []),
+        "brownout_denied": brown.get("denied", 0),
+        "wall_s": wall_s,
+    }
+
+
+def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
+              seed: int = STORM_SEED) -> dict:
+    """Serve the same trace through the same storm, both arms."""
+    profs, _intf, _ = setup()
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    plan = _storm(n_nodes, horizon_s, seed)
+    naive = _serve(scn, profs, _cfg(plan, False, horizon_s), horizon_s,
+                   seed, label=f"chaos_{n_nodes}n_naive")
+    rec = _serve(scn, profs, _cfg(plan, True, horizon_s), horizon_s,
+                 seed, label=f"chaos_{n_nodes}n_recovery")
+    return {
+        "n_nodes": n_nodes,
+        "horizon_s": horizon_s,
+        "storm_seed": seed,
+        "n_faults": len(plan.faults),
+        "naive": naive,
+        "recovery": rec,
+        "gold_attainment_delta":
+            rec["per_class"]["gold"]["slo_attainment"]
+            - naive["per_class"]["gold"]["slo_attainment"],
+        "goodput_gain":
+            rec["goodput_req_s"] / max(naive["goodput_req_s"], 1e-9),
+    }
+
+
+def run(fast: bool = False) -> list[Row]:
+    node_counts = (4,) if fast else NODE_COUNTS
+    horizon_s = 10.0 if fast else HORIZON_S
+    points = [run_point(n, horizon_s) for n in node_counts]
+    if not fast:
+        payload = {
+            "benchmark": "chaos_naive_vs_recovery",
+            "horizon_s": HORIZON_S,
+            "storm_seed": STORM_SEED,
+            "points": points,
+        }
+        merge_bench_json(OUT_PATH, "chaos", payload)
+    rows = []
+    for p in points:
+        b, r = p["naive"], p["recovery"]
+        rows.append(Row(
+            f"fabric/chaos_{p['n_nodes']}n",
+            (b["wall_s"] + r["wall_s"]) * 1e6,
+            f"requests={b['requests']} faults={p['n_faults']} "
+            f"gold_attain={100*b['per_class']['gold']['slo_attainment']:.2f}%"
+            f"->{100*r['per_class']['gold']['slo_attainment']:.2f}% "
+            f"goodput={b['goodput_req_s']:.0f}->{r['goodput_req_s']:.0f}"
+            f"req/s (x{p['goodput_gain']:.2f}) "
+            f"retries={r['retries']} retry_drops={r['retry_drops']} "
+            f"evictions={sum(1 for e in r['health_events'] if e[2] == 'evicted')}"))
+    return rows
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="3-node CI smoke: conservation + recovery win")
+    add_trace_dir_arg(ap)
+    args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
+    if not args.tiny:
+        for row in run():
+            print(row.csv())
+        return 0
+    p = run_point(3, horizon_s=8.0)
+    b, r = p["naive"], p["recovery"]
+    print(f"chaos-tiny n=3 requests={b['requests']} "
+          f"faults={p['n_faults']} "
+          f"gold {100*b['per_class']['gold']['slo_attainment']:.2f}%->"
+          f"{100*r['per_class']['gold']['slo_attainment']:.2f}% "
+          f"retries={r['retries']} retry_drops={r['retry_drops']} "
+          f"health_events={len(r['health_events'])}")
+    if not (b["conserved"] and r["conserved"]):
+        print("SMOKE FAIL: request conservation broken under the storm")
+        return 1
+    if not r["health_events"]:
+        print("SMOKE FAIL: the storm never tripped the health detector")
+        return 1
+    if p["gold_attainment_delta"] <= 0:
+        print("SMOKE FAIL: recovery lost gold-class SLO attainment "
+              "to naive failover")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import warnings
 
 from repro.core.profiles import ModelProfile
 
@@ -139,6 +140,35 @@ class FabricScenario:
             raise ValueError(
                 "rate_phases and hotspot cannot be combined: express "
                 "the burst as a phase segment instead")
+        seen: set[int] = set()
+        for node_id, t_s in self.fail_at_s:
+            if t_s < 0:
+                raise ValueError(
+                    f"fail_at_s: negative failure instant {t_s} "
+                    f"for node {node_id}")
+            if not 0 <= node_id < self.n_nodes:
+                raise ValueError(
+                    f"fail_at_s names node {node_id}; scenario "
+                    f"{self.name!r} has nodes 0..{self.n_nodes - 1}")
+            if node_id in seen:
+                raise ValueError(
+                    f"fail_at_s lists node {node_id} twice — a node "
+                    "dies at most once")
+            seen.add(node_id)
+
+    def warn_if_failures_after(self, horizon_s: float) -> None:
+        """Warn about scheduled deaths that can never fire.
+
+        Called by the trace builders, which know the horizon the
+        scenario will actually run under; a failure at/after it makes
+        the 'failure-drain' scenario silently failure-free.
+        """
+        for node_id, t_s in self.fail_at_s:
+            if t_s >= horizon_s:
+                warnings.warn(
+                    f"scenario {self.name!r}: node {node_id} failure at "
+                    f"{t_s} s is at/after the {horizon_s} s horizon and "
+                    "never fires", stacklevel=3)
 
     def models(self) -> list[str]:
         """Every model named anywhere in the scenario (sorted)."""

@@ -6,6 +6,9 @@ dispatches the client trace across nodes under a pluggable policy, with
 priority classes, preemption, and a network delay model layered on top.
 """
 from repro.fabric.fabric import FabricConfig, FabricMetrics, ServingFabric
+from repro.faults import (FaultPlan, HealthDetector, HealthParams,
+                          NetworkDegradation, PermanentCrash, RetryPolicy,
+                          StragglerWindow, TransientCrash, chaos_plan)
 from repro.fabric.global_scheduler import (GlobalScheduler, MigrationEvent,
                                            NodeUpdate)
 from repro.fabric.network import NetworkModel
@@ -21,11 +24,13 @@ from repro.fabric.workload import (build_dag_fabric, build_dag_trace_soa,
 
 __all__ = [
     "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
-    "FabricNode", "FabricRouter", "GOLD", "GlobalScheduler",
-    "MigrationEvent", "NetworkModel", "NodeSpec", "NodeUpdate",
-    "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "SILVER",
-    "ServingFabric", "assign_priorities", "build_dag_fabric",
-    "build_dag_trace_soa", "build_fabric", "build_stream_fabric",
-    "build_stream_trace_soa", "build_trace", "build_trace_soa",
-    "draw_priorities", "stream_occupancies",
+    "FabricNode", "FabricRouter", "FaultPlan", "GOLD", "GlobalScheduler",
+    "HealthDetector", "HealthParams", "MigrationEvent", "NetworkDegradation",
+    "NetworkModel", "NodeSpec", "NodeUpdate", "PermanentCrash",
+    "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "RetryPolicy",
+    "SILVER", "ServingFabric", "StragglerWindow", "TransientCrash",
+    "assign_priorities", "build_dag_fabric", "build_dag_trace_soa",
+    "build_fabric", "build_stream_fabric", "build_stream_trace_soa",
+    "build_trace", "build_trace_soa", "chaos_plan", "draw_priorities",
+    "stream_occupancies",
 ]

@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import multiprocessing
 import os
+import warnings
 from collections.abc import Mapping, Sequence
 
 import numpy as np
@@ -29,14 +30,18 @@ from repro.core.profiles import ModelProfile
 from repro.fabric.network import NetworkModel
 from repro.fabric.node import FabricNode, NodeSpec
 from repro.fabric.router import DispatchStats, FabricRouter
-from repro.obs.timeline import (CAUSE_DROP_PARENT, CAUSE_DROP_REPLAY,
-                                CAUSE_DROP_SHUTDOWN)
+from repro.faults import (BrownoutController, BrownoutParams, FaultPlan,
+                          HealthDetector, HealthParams, PermanentCrash,
+                          RetryLedger, RetryPolicy, epoch_pressure)
+from repro.obs.timeline import (CAUSE_BROWNOUT, CAUSE_DROP_PARENT,
+                                CAUSE_DROP_REPLAY, CAUSE_DROP_RETRY,
+                                CAUSE_DROP_SHUTDOWN, attach_timeline)
 from repro.simulator.engine import EngineConfig
 from repro.simulator.events import Request
 from repro.simulator.metrics import (JobMetrics, SimMetrics, collect_jobs,
                                      collect_trace)
 from repro.simulator.trace import (COMPLETED, DROPPED, FIRST_DROP_STATUS,
-                                   UNSERVED, RequestTrace)
+                                   PENDING, SHED, UNSERVED, RequestTrace)
 
 
 @dataclasses.dataclass
@@ -113,6 +118,33 @@ class FabricConfig:
     #: fig_streaming contrast arm.  Provisioning-side rate inflation is
     #: the workload builder's job (fabric.workload.build_stream_fabric).
     stream_occupancy: dict[str, float] | None = None
+    # ---- fault injection + recovery (chaos serving) ----
+    #: typed, seeded fault schedule.  Non-empty plans are served by the
+    #: chaos epoch loop (``_serve_chaos``), where failures are *detected*
+    #: from dispatch outcomes rather than known in advance; ``None`` (or
+    #: an empty plan) keeps every legacy serving path byte-identical.
+    faults: FaultPlan | None = None
+    #: chaos epoch cadence: dispatch, crash eviction, health observation,
+    #: retry replay, and brownout decisions all land on this grid (plus
+    #: every fault-window edge, so no window straddles an observation gap)
+    chaos_epoch_ms: float = 100.0
+    #: a dispatch lost in transit is declared dead this long after send
+    #: (its replay cannot be floored earlier — the router has to wait out
+    #: the RPC timeout before it knows the request went nowhere)
+    rpc_timeout_ms: float = 50.0
+    #: the recovery stack: health detection + eviction on the router and
+    #: the brownout ladder.  ``False`` is the naive-failover contrast arm
+    #: — no detector, a single blind retry with the legacy failover lag.
+    recovery: bool = True
+    #: deadline-aware retry budget; ``None`` picks the arm default
+    #: (``RetryPolicy()`` with recovery, single blind retry without)
+    retry: RetryPolicy | None = None
+    #: health-detector tuning; ``None`` = ``HealthParams()`` defaults
+    health: HealthParams | None = None
+    #: graceful degradation under sustained gold-class SLO pressure
+    #: (only active together with ``recovery``)
+    brownout: bool = True
+    brownout_params: BrownoutParams | None = None
 
 
 @dataclasses.dataclass
@@ -120,13 +152,14 @@ class FabricMetrics:
     """Fleet-wide client-perspective metrics + per-node breakdown.
 
     ``fleet`` is authoritative.  ``per_node`` entries are each node's
-    *local* view, snapshotted when its engine finished — for a node that
-    died mid-horizon this includes batches whose completion the engine
-    stamped at/after the cut, even though the fabric then resets those
-    requests as casualties and replays them on survivors (where they are
-    counted again).  Summing ``per_node`` completions therefore
-    over-counts under failure-drain; it is a per-node diagnostic, not a
-    partition of the fleet totals.
+    *local* view, snapshotted when its engine finished.  Requests the
+    fabric reset and replayed elsewhere — a dead node's casualties, a
+    donor's hand-backs, chaos-loop evictions — are excluded from the
+    tally of every node that lost them, so each request appears in at
+    most one node's counts: the node that finally resolved it.  Summing
+    ``per_node`` outcomes therefore partitions the node-touched rows;
+    requests the *router* resolved (shed, lost, brownout denials) belong
+    to no node and show up only in ``fleet`` / ``stats``.
     """
 
     fleet: SimMetrics
@@ -138,6 +171,9 @@ class FabricMetrics:
     migration_events: list = dataclasses.field(default_factory=list)
     #: end-to-end job accounting for staged (DAG) traces; None otherwise
     jobs: JobMetrics | None = None
+    #: chaos-serving diagnostics (retry/detector/brownout counters and
+    #: event logs); ``None`` on the legacy serving paths
+    chaos: dict | None = None
 
     @property
     def migrations(self) -> int:
@@ -230,10 +266,42 @@ class ServingFabric:
         start from).  ``scheduler_factory(profiles, cluster)`` returns a
         scheduler per node; defaults to plain
         :class:`ElasticPartitioning`.  ``fail_at_ms`` maps node_id -> the
-        wall-clock instant that node dies (failure-drain scenarios).
+        wall-clock instant that node dies (failure-drain scenarios): it
+        is normalized through the typed fault taxonomy — a
+        :class:`~repro.faults.FaultPlan` of permanent crashes — so both
+        failure entry points share one validation path, then projected
+        back onto ``NodeSpec.fail_at_ms`` for the legacy omniscient-drain
+        loop.  Plans passed via ``cfg.faults`` instead are served by the
+        chaos loop, where ``NodeSpec.fail_at_ms`` stays ``None`` and
+        failures must be *detected*.
         """
         cfg = cfg or FabricConfig()
-        fail_at_ms = dict(fail_at_ms or {})
+        chaos = cfg.faults is not None and not cfg.faults.is_empty
+        if fail_at_ms and chaos:
+            raise ValueError(
+                "pass node failures either as build(fail_at_ms=...) or "
+                "as cfg.faults, not both — the legacy drain loop and the "
+                "chaos loop cannot share a fleet")
+        plan = cfg.faults
+        if fail_at_ms:
+            plan = FaultPlan(tuple(
+                PermanentCrash(node_id=int(i), t_ms=float(t))
+                for i, t in sorted(dict(fail_at_ms).items())))
+        crash_ms: dict[int, float] = {}
+        if plan is not None:
+            bad = [i for i in plan.node_ids() if not 0 <= i < n_nodes]
+            if bad:
+                raise ValueError(
+                    f"fault schedule names node(s) {bad}; "
+                    f"fleet has nodes 0..{n_nodes - 1}")
+            for i, t in sorted(plan.permanent_crash_ms().items()):
+                if t >= cfg.horizon_ms:
+                    warnings.warn(
+                        f"node {i} permanent crash at {t:.0f} ms is "
+                        f"at/after the horizon ({cfg.horizon_ms:.0f} ms) "
+                        "and never fires", stacklevel=2)
+            if not chaos:
+                crash_ms = plan.permanent_crash_ms()
         if placement is not None and len(placement) != n_nodes:
             raise ValueError(
                 f"placement has {len(placement)} entries for "
@@ -279,7 +347,7 @@ class ServingFabric:
                 preemption=cfg.preemption,
                 preempt_cost_ms=cfg.preempt_cost_ms)
             spec = NodeSpec(node_id=i, cluster=node_cluster,
-                            fail_at_ms=fail_at_ms.get(i))
+                            fail_at_ms=crash_ms.get(i))
             nodes.append(FabricNode(spec, profiles, schedule, ecfg,
                                     on_tick=on_tick))
         return cls(profiles, nodes, cfg, affinity_weights=affinity_weights)
@@ -312,6 +380,9 @@ class ServingFabric:
         self._served = True
         for node in self.nodes:
             node.trace = trace
+        plan = self.cfg.faults
+        if plan is not None and not plan.is_empty:
+            return self._serve_chaos(trace)
         if trace.has_stages:
             return self._serve_dag(trace)
         if trace.has_streams:
@@ -349,6 +420,17 @@ class ServingFabric:
                 # client-consistent (same trick as the network delay).
                 self._replay(trace, lost, node.spec.fail_at_ms,
                              self.cfg.failover_ms)
+                # the casualties now belong to whichever survivor
+                # resolves them — re-collect this node's tally without
+                # them so per_node outcome counts stay a partition of
+                # the fleet totals instead of double-counting replays
+                eng = node.engine
+                keep = eng._gidx[~np.isin(eng._gidx, lost)]
+                busy: dict[int, float] = {}
+                for (_epoch, li), ms in eng.busy_ms.items():
+                    busy[li] = busy.get(li, 0.0) + ms
+                node.metrics = collect_trace(
+                    trace, node.spec.fail_at_ms, busy, idx=keep)
         self._run_donors(trace)
         self._run_healthy(trace)
         fleet = collect_trace(trace, self.cfg.horizon_ms)
@@ -393,6 +475,384 @@ class ServingFabric:
             self.replayed_ids.append(replay)
             self.router.dispatch(trace, replay, failover=not handback,
                                  handback=handback)
+
+    # ---- chaos serving (fault injection + recovery, ISSUE 9) ---------------
+
+    def _serve_chaos(self, trace: RequestTrace) -> FabricMetrics:
+        """Epoch loop serving a trace under a typed fault schedule.
+
+        Nodes run incrementally (``begin_stream`` / ``run_until``), so
+        this path is sequential — ``node_workers`` does not apply.  At
+        every boundary of the chaos grid (the ``chaos_epoch_ms`` cadence
+        plus every fault-window edge) the loop:
+
+        1. admits the boundary's arrivals through the brownout ladder
+           and dispatches them (health-laddered candidate selection);
+        2. advances every engine to the boundary;
+        3. evicts everything a down node still owes (``crash_evict``)
+           and declares in-transit dispatch losses dead once the RPC
+           timeout has passed;
+        4. folds the epoch's per-node outcomes into the health detector
+           — eviction and reinstatement derive from *observed*
+           completions and failures, never from the fault plan;
+        5. replays the casualties under the deadline-aware retry budget
+           (a replay that cannot meet its SLO anymore is shed with
+           ``CAUSE_DROP_RETRY``, not re-dispatched);
+        6. steps the brownout ladder on the epoch's gold-class miss
+           pressure;
+        7. lands due migration decisions and donor hand-backs.
+
+        The naive arm (``recovery=False``) skips 4 and 6 and replays
+        each casualty once with the flat legacy failover lag — the
+        ``fig_chaos`` contrast.  The fault plan is read only to *inject*
+        (engine outage/straggler windows, network degradation, eviction
+        instants); routing never consults it.
+        """
+        cfg = self.cfg
+        plan = cfg.faults
+        horizon = cfg.horizon_ms
+        if trace.has_stages:
+            raise ValueError(
+                "staged (DAG) traces cannot be served under a fault "
+                "schedule yet — casualty replay is stage-oblivious")
+        if cfg.period_s is not None:
+            raise ValueError(
+                "per-node controllers (period_s) cannot run under a "
+                "fault schedule — incremental engines take no tick "
+                "subscriber")
+        if cfg.migrations and trace.has_streams:
+            raise ValueError(
+                "streaming traces cannot be combined with migrations "
+                "yet — a migration cut cannot carry a node's live "
+                "decode pools to the model's new home")
+        if any(n.spec.fail_at_ms is not None for n in self.nodes):
+            raise ValueError(
+                "NodeSpec.fail_at_ms and cfg.faults cannot be combined "
+                "— schedule the crash as a PermanentCrash fault")
+        self._chaos_retries = 0
+        self._chaos_retry_drops = 0
+        policy = cfg.retry
+        if policy is None:
+            policy = RetryPolicy() if cfg.recovery else RetryPolicy(
+                max_retries=1, backoff_base_ms=cfg.failover_ms,
+                backoff_factor=1.0)
+        ledger = RetryLedger()
+        router = self.router
+        router.faults_on = True
+        det = None
+        brown = None
+        if cfg.recovery:
+            det = HealthDetector([n.node_id for n in self.nodes],
+                                 cfg.health or HealthParams())
+            router.health = det
+            if cfg.brownout:
+                # the ladder reads terminal stamps off the timeline;
+                # attach one now (pre-dispatch) if the caller didn't
+                attach_timeline(trace)
+                brown = BrownoutController(cfg.brownout_params
+                                           or BrownoutParams())
+        if plan.net_windows():
+            router.network = cfg.network.with_degradations(
+                plan.net_windows())
+        for node in self.nodes:
+            node.install_faults(plan.outage_windows(node.node_id),
+                                plan.straggler_windows(node.node_id))
+            node.begin_stream()
+        # ---- the chaos epoch grid ----
+        bset = {float(horizon)}
+        mig_bounds: set[float] = set()
+        gs = None
+        if cfg.migrations and cfg.migration_period_ms > 0:
+            from repro.fabric.global_scheduler import GlobalScheduler
+            gs = self.global_scheduler
+            if gs is None:
+                gs = self.global_scheduler = GlobalScheduler(
+                    self.profiles, self.nodes, cfg)
+            gs.health = det
+            k = 1
+            while k * cfg.migration_period_ms < horizon - 1e-9:
+                mig_bounds.add(k * cfg.migration_period_ms)
+                k += 1
+            bset |= mig_bounds
+        if cfg.chaos_epoch_ms > 0:
+            k = 1
+            while k * cfg.chaos_epoch_ms < horizon - 1e-9:
+                bset.add(k * cfg.chaos_epoch_ms)
+                k += 1
+        for b in plan.boundary_instants():
+            if 0.0 < b < horizon:
+                bset.add(float(b))
+        boundaries = sorted(bset)
+        # bucket by pristine client arrivals, before network shifts
+        ep = np.searchsorted(np.asarray(boundaries), trace.arrival_ms,
+                             side="right")
+        ep = np.minimum(ep, len(boundaries) - 1)
+        epoch_ids = [np.flatnonzero(ep == k)
+                     for k in range(len(boundaries))]
+        nm = len(trace.models)
+        mig_counts = np.zeros(nm, dtype=np.int64)
+        pend_len = [len(n.pending_idx) for n in self.nodes]
+        last_mig = 0.0
+        t_prev = 0.0
+        for k, t1 in enumerate(boundaries):
+            ids = epoch_ids[k]
+            if len(ids):
+                ids = self._brownout_admit(trace, ids, brown)
+            if len(ids):
+                router.dispatch(trace, ids)
+                if gs is not None:
+                    mig_counts += np.bincount(trace.model_id[ids],
+                                              minlength=nm)
+            for node in self.nodes:
+                node.feed_pending()
+            for node in self.nodes:
+                node.run_until(t1)
+            # -- casualty collection: crash evictions + transit losses --
+            failed = {n.node_id: 0 for n in self.nodes}
+            lost_parts: list[np.ndarray] = []
+            floor_parts: list[np.ndarray] = []
+            for node in self.nodes:
+                if plan.down_at(node.node_id, t1):
+                    ev = node.crash_evict(t1)
+                    if len(ev):
+                        failed[node.node_id] += len(ev)
+                        lost_parts.append(ev)
+                        floor_parts.append(np.full(len(ev), t1))
+            if router.in_transit_lost:
+                g = np.asarray([x[0] for x in router.in_transit_lost],
+                               dtype=np.int64)
+                fl = np.asarray([x[1] + cfg.rpc_timeout_ms
+                                 for x in router.in_transit_lost])
+                for _gid, _ts, nid in router.in_transit_lost:
+                    failed[nid] += 1
+                router.in_transit_lost.clear()
+                lost_parts.append(g)
+                floor_parts.append(np.minimum(fl, t1))
+            # -- health: observed outcomes only, never the plan --
+            if det is not None:
+                for node in self.nodes:
+                    det.observe(node.node_id, t1,
+                                self._node_ok(node, t_prev, t1),
+                                failed[node.node_id])
+            if lost_parts:
+                self._chaos_replay(trace, np.concatenate(lost_parts),
+                                   np.concatenate(floor_parts),
+                                   policy, ledger)
+                for node in self.nodes:
+                    node.feed_pending()
+            if brown is not None:
+                brown.on_epoch(t1, epoch_pressure(trace, t_prev, t1),
+                               trace)
+            # -- donor hand-backs: queues released by a staged apply --
+            for node in self.nodes:
+                if not node.removed_models:
+                    continue
+                due = [m for m, ta in node.removed_models.items()
+                       if ta <= t1]
+                if not due:
+                    continue
+                mids = [trace.model_index[m] for m in due
+                        if m in trace.model_index]
+                ev = node.evict_unrouted(mids) if mids else \
+                    np.empty(0, dtype=np.int64)
+                for m in due:
+                    del node.removed_models[m]
+                if len(ev):
+                    self._replay(trace, ev, t1, cfg.handback_ms,
+                                 handback=True)
+                    for nd in self.nodes:
+                        nd.feed_pending()
+            # -- migration decision at migration-period boundaries --
+            if gs is not None and t1 in mig_bounds:
+                span_s = max((t1 - last_mig) / 1e3, 1e-9)
+                demand = {trace.models[m]: c / span_s
+                          for m, c in enumerate(mig_counts.tolist())
+                          if c}
+                mig_counts[:] = 0
+                node_obs = []
+                for j, node in enumerate(self.nodes):
+                    new = node.pending_idx[pend_len[j]:]
+                    pend_len[j] = len(node.pending_idx)
+                    if new:
+                        nc = np.bincount(
+                            trace.model_id[np.asarray(new,
+                                                      dtype=np.int64)],
+                            minlength=nm)
+                        node_obs.append(
+                            {trace.models[m]: c / span_s
+                             for m, c in enumerate(nc.tolist()) if c})
+                    else:
+                        node_obs.append({})
+                # index over the same live set gs.on_epoch filters to
+                live = [j for j, n in enumerate(self.nodes)
+                        if n.alive_at(t1)
+                        and (det is None or det.routable(n.node_id, t1))]
+                backlogs = router.backlogs(t1)
+                ob = trace.obs
+                for u in gs.on_epoch(t1, demand,
+                                     [node_obs[j] for j in live],
+                                     [backlogs[j] for j in live],
+                                     horizon - t1):
+                    nd = self.nodes[u.node_id]
+                    nd.apply_update(u.t_cut_ms, u.t_apply_ms, u.schedule,
+                                    u.added, u.removed)
+                    nd.engine.apply_schedule_at(u.t_apply_ms, u.schedule)
+                    if ob is not None:
+                        ob.fleet_log.append(
+                            ("migration", u.t_cut_ms, u.node_id,
+                             len(u.added), len(u.removed)))
+                last_mig = t1
+            t_prev = t1
+        # ---- post-horizon drain: replay until the fleet runs dry ----
+        ecfg = self.nodes[0].cfg
+        max_clock = ecfg.horizon_ms * ecfg.drain_factor
+        for _ in range(64):
+            for node in self.nodes:
+                node.run_until(max_clock)
+            lost_parts, floor_parts = [], []
+            for node in self.nodes:
+                if plan.down_at(node.node_id, max_clock):
+                    ev = node.crash_evict(max_clock)
+                    if len(ev):
+                        if det is not None:
+                            det.observe(node.node_id, max_clock,
+                                        0, len(ev))
+                        lost_parts.append(ev)
+                        floor_parts.append(np.full(len(ev), horizon))
+            if router.in_transit_lost:
+                g = np.asarray([x[0] for x in router.in_transit_lost],
+                               dtype=np.int64)
+                fl = np.asarray([x[1] + cfg.rpc_timeout_ms
+                                 for x in router.in_transit_lost])
+                router.in_transit_lost.clear()
+                lost_parts.append(g)
+                floor_parts.append(fl)
+            if not lost_parts:
+                break
+            self._chaos_replay(trace, np.concatenate(lost_parts),
+                               np.concatenate(floor_parts),
+                               policy, ledger)
+            for node in self.nodes:
+                node.feed_pending()
+        for node in self.nodes:
+            node.finish_stream()
+            node.retired = True
+        fleet = collect_trace(trace, horizon)
+        per_node = {n.node_id: n.metrics for n in self.nodes
+                    if n.metrics is not None}
+        preemptions = sum(n.engine.preemptions if n.engine is not None
+                          else n.preemptions for n in self.nodes)
+        if gs is not None:
+            self.migration_events = list(gs.events)
+        chaos = {
+            "recovery": bool(cfg.recovery),
+            "retries": self._chaos_retries,
+            "retry_drops": self._chaos_retry_drops,
+            "retry_attempts": ledger.total_attempts,
+            "net_lost": int(router.stats.net_lost),
+            "detector": det.summary() if det is not None else None,
+            "brownout": brown.summary() if brown is not None else None,
+        }
+        return FabricMetrics(fleet=fleet, per_node=per_node,
+                             stats=router.stats,
+                             preemptions=preemptions,
+                             migration_events=list(self.migration_events),
+                             chaos=chaos)
+
+    @staticmethod
+    def _node_ok(node: FabricNode, t0: float, t1: float) -> int:
+        """Completions node's engine stamped in ``(t0, t1]`` (final only).
+
+        Reads the engine's *local* mirrors, not the shared trace, so a
+        row another node completed is never credited here; stamps beyond
+        ``t1`` belong to in-flight batches and are still revocable.
+        """
+        eng = node.engine
+        st = np.asarray(eng._status_l)
+        if not st.size:
+            return 0
+        dn = np.asarray(eng._done_l)
+        return int(np.count_nonzero(
+            (st == COMPLETED) & (dn > t0) & (dn <= t1)))
+
+    def _brownout_admit(self, trace: RequestTrace, ids: np.ndarray,
+                        brown) -> np.ndarray:
+        """Filter one boundary's arrivals through the brownout ladder.
+
+        Level 1 sheds bronze (priority >= 2) at admission, level 2 also
+        truncates admitted non-gold stream rows to ``truncate_tokens``,
+        level 3 denies everything but gold.  Denials resolve immediately
+        with ``CAUSE_BROWNOUT`` — the client gets a fast rejection
+        instead of a slow miss.
+        """
+        if brown is None or brown.level == 0:
+            return ids
+        pri = trace.priority[ids]
+        deny = pri >= (1 if brown.level >= 3 else 2)
+        denied = ids[deny]
+        if len(denied):
+            trace.status[denied] = SHED
+            brown.denied += len(denied)
+            ob = trace.obs
+            if ob is not None:
+                ob.resolve_ms[denied] = trace.arrival_ms[denied]
+                ob.cause[denied] = CAUSE_BROWNOUT
+        keep = ids[~deny]
+        if brown.level >= 2 and trace.has_streams and len(keep):
+            cap = brown.params.truncate_tokens
+            tgt = keep[(trace.priority[keep] >= 1)
+                       & (trace.output_len[keep] > cap)]
+            if len(tgt):
+                trace.output_len[tgt] = cap
+                brown.truncated += len(tgt)
+        return keep
+
+    def _chaos_replay(self, trace: RequestTrace, lost: np.ndarray,
+                      floor_ms, policy: RetryPolicy,
+                      ledger: RetryLedger) -> None:
+        """Replay casualties under the deadline-aware retry budget.
+
+        Like :meth:`_replay`, the replay instant becomes the node-side
+        arrival and the burned wait shrinks the SLO budget (charged to
+        the failover column, so attribution still sums exactly).  Unlike
+        it, each request carries an attempt counter: replay ``k`` backs
+        off ``backoff_base * factor**k`` first, and a request whose
+        budget is spent — or whose remaining SLO after the burn cannot
+        clear ``min_headroom_ms`` — is shed with ``CAUSE_DROP_RETRY``
+        instead of stealing survivor capacity it cannot use.
+        """
+        lost = np.asarray(lost, dtype=np.int64)
+        if not lost.size:
+            return
+        # stale stamps synced before the eviction died with the node
+        trace.completion_ms[lost] = np.nan
+        trace.status[lost] = PENDING
+        arr = trace.arrival_ms
+        attempts = ledger.counts(lost)
+        t_replay = np.maximum(arr[lost], floor_ms) \
+            + policy.lag_ms(attempts)
+        burn = t_replay - arr[lost]
+        new_slo = trace.slo_ms[lost] - burn
+        trace.slo_ms[lost] = new_slo
+        arr[lost] = t_replay
+        give_up = (attempts >= policy.max_retries) \
+            | (new_slo <= policy.min_headroom_ms)
+        trace.status[lost[give_up]] = DROPPED
+        ob = trace.obs
+        if ob is not None:
+            ob.reset_rows(lost)
+            ob.charge_replay(lost, burn, False)
+            gu = lost[give_up]
+            if len(gu):
+                ob.resolve_ms[gu] = t_replay[give_up]
+                ob.cause[gu] = CAUSE_DROP_RETRY
+        self._chaos_retry_drops += int(np.count_nonzero(give_up))
+        replay = lost[~give_up]
+        if len(replay):
+            self._chaos_retries += len(replay)
+            ledger.bump(replay)
+            self.replayed_ids.append(replay)
+            self.router.dispatch(trace, replay, failover=True)
 
     # ---- task-graph (DAG) serving ------------------------------------------
 

@@ -116,6 +116,9 @@ class GlobalScheduler:
         self._rng = np.random.default_rng(cfg.migration_seed)
         #: every applied delta, in decision order (tests + benchmarks)
         self.events: list[MigrationEvent] = []
+        #: chaos serving (ISSUE 9): a HealthDetector; nodes it has
+        #: evicted are not migration receivers (None = legacy behavior)
+        self.health = None
 
     # ---- helpers -----------------------------------------------------------
 
@@ -163,7 +166,9 @@ class GlobalScheduler:
         ewma = self.tracker.update(dict(demand))
         target = predict_target(ewma, demand, self._prev_obs)
         self._prev_obs = dict(demand)
-        live = [n for n in self.nodes if n.alive_at(t_ms)]
+        live = [n for n in self.nodes if n.alive_at(t_ms)
+                and (self.health is None
+                     or self.health.routable(n.node_id, t_ms))]
         if not live or remaining_ms < 2.0 * cfg.migration_warmup_ms:
             return []   # nothing to place on / warm-up cannot pay back
         prov = self._fleet_provisioned(live)

@@ -19,6 +19,14 @@ the engine with its clock hard-capped at ``fail_at_ms``: requests completed
 strictly before the failure survive; everything else (queued, in flight,
 or "completed" after the cut) is a casualty the fabric re-dispatches to
 surviving nodes.
+
+Chaos serving (ISSUE 9) uses a different mechanism: the fabric compiles a
+``FaultPlan`` into the engine's ``outages``/``slowdowns`` windows
+(:meth:`FabricNode.install_faults`) and runs every node incrementally
+(``begin_stream``/``feed_pending``/``run_until``).  At each crash
+boundary the node's engine revokes what it still owes
+(:meth:`FabricNode.crash_evict`) and the fabric replays those casualties
+under a retry budget — no clock cap, no omniscient ``fail_at_ms``.
 """
 from __future__ import annotations
 
@@ -264,6 +272,33 @@ class FabricNode:
         self.metrics = self.engine.finish()
         self.span_log = self.engine.log
         return self.metrics
+
+    # ---- chaos serving (fault injection, ISSUE 9) --------------------------
+
+    def install_faults(self, outages, slowdowns) -> None:
+        """Wire this node's fault windows into its engine config.
+
+        Must run before :meth:`begin_stream` builds the engine.  A node
+        with no windows keeps its pristine config (and thus the pristine
+        hot paths).
+        """
+        if outages or slowdowns:
+            self.cfg = dataclasses.replace(
+                self.cfg, outages=tuple(outages),
+                slowdowns=tuple(slowdowns))
+
+    def crash_evict(self, t_ms: float) -> np.ndarray:
+        """Revoke everything this node still owes at a crash instant.
+
+        Returns the global ids of the evicted rows (queued, pooled, or
+        in flight at ``t_ms``); the fabric accounts them as casualties
+        and replays under the retry budget.
+        """
+        return self.engine.crash_evict(t_ms)
+
+    def evict_unrouted(self, mids) -> np.ndarray:
+        """Pull queued rows of migrated-away models out of the engine."""
+        return self.engine.evict_unrouted(mids)
 
     def casualties(self) -> np.ndarray:
         """Requests lost to this node's failure, reset for re-dispatch.

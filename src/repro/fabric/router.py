@@ -119,6 +119,10 @@ class DispatchStats:
     failed_over: int = 0
     #: requests re-dispatched after a migration stranded them on a donor
     handed_back: int = 0
+    #: dispatches lost in transit inside a network-degradation window
+    #: (ISSUE 9); each loss is detected by the chaos loop after its RPC
+    #: timeout and re-enters via the retry-budget replay path
+    net_lost: int = 0
 
     def count(self, d: dict[int, int], key: int) -> None:
         d[key] = d.get(key, 0) + 1
@@ -197,6 +201,15 @@ class FabricRouter:
         self._load_by_node_id = {ld.node.node_id: ld for ld in self._loads}
         self._fanout_l: list[int] | None = None   # per-row child count
         self.stats = DispatchStats()
+        #: chaos serving (ISSUE 9): a HealthDetector whose ``routable``
+        #: verdict gates candidacy (None = legacy omniscient dispatch)
+        self.health = None
+        #: chaos serving: route every pass through the generic loop and
+        #: consult the network's degradation windows per send
+        self.faults_on = False
+        #: (global id, send instant, node_id) of dispatches lost in
+        #: transit; the fabric drains this each chaos epoch
+        self.in_transit_lost: list[tuple[int, float, int]] = []
 
     # ---- dispatch entry ---------------------------------------------------
 
@@ -245,7 +258,11 @@ class FabricRouter:
             return self.stats
         order = ids[np.argsort(trace.arrival_ms[ids], kind="stable")]
         replay = failover or handback
-        if replay:
+        if replay and not self.faults_on:
+            # legacy replay passes run after the primary pass walked the
+            # whole horizon, so the stale fluid view restarts from zero.
+            # Chaos replays interleave with live epoch dispatch — the
+            # view is causally valid at the replay instant and stands.
             t0 = float(trace.arrival_ms[order[0]])
             for ld in self._loads:
                 ld.reset(t0)
@@ -271,6 +288,10 @@ class FabricRouter:
         retirements that would change the candidate set mid-pass.
         """
         if self.policy != "least-loaded" or not self._loads:
+            return False
+        if self.faults_on or self.health is not None:
+            # chaos serving: candidacy varies per send (health verdicts,
+            # degradation windows) — the collapse does not hold
             return False
         if trace.has_stages:
             # per-request parent lookups (co-location, node stamping)
@@ -423,6 +444,17 @@ class FabricRouter:
     # ---- generic per-request loop (exotic shapes + other policies) --------
 
     def _candidates(self, model: str, t_ms: float) -> list[_NodeLoad]:
+        h = self.health
+        if h is not None:
+            # detected health gates candidacy first; the ladder widens to
+            # health-blind and then any-live rather than losing requests
+            # outright when the detector has evicted every home
+            cands = [ld for ld in self._loads
+                     if ld.node.alive_at(t_ms)
+                     and ld.node.serves(model, t_ms)
+                     and h.routable(ld.node.node_id, t_ms)]
+            if cands:
+                return cands
         cands = [ld for ld in self._loads
                  if ld.node.alive_at(t_ms) and ld.node.serves(model, t_ms)]
         if not cands:  # nobody provisioned for the model: any live node
@@ -501,6 +533,7 @@ class FabricRouter:
         pri_list = trace.priority[order].tolist()
         mid_list = trace.model_id[order].tolist()
         net = self.network
+        faults_on = self.faults_on
         track_rates = self.policy == "slo-headroom"
         stats = self.stats
         shed_ids: list[int] = []
@@ -554,10 +587,18 @@ class FabricRouter:
                         ld = alt
                         stats.count(stats.rerouted, p)
             node = ld.node
+            if faults_on and not co and net.lost(t):
+                # lost in transit inside a degradation window: the node
+                # never hears about the request.  The chaos loop detects
+                # it after the RPC timeout and replays under the retry
+                # budget — status stays PENDING here (single writer).
+                self.in_transit_lost.append((oid[k], t, node.node_id))
+                stats.net_lost += 1
+                continue
             if co:
                 d = 0.0   # same-node hand-off: no RPC, no round trip
             else:
-                d = net.delay_ms(node.node_id)
+                d = net.delay_ms(node.node_id, t if faults_on else None)
             if d > 0.0:
                 sent_ids.append(oid[k])
                 sent_d.append(d)

@@ -37,6 +37,7 @@ def build_trace_soa(scn: FabricScenario,
     i.i.d. from the scenario's mix, deterministically per seed.
     """
     gen = PoissonArrivals(seed=seed)
+    scn.warn_if_failures_after(horizon_s)
     horizon_ms = horizon_s * 1e3
     streams = []
     # drift scenarios may introduce models whose t=0 rate is zero, so the

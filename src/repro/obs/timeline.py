@@ -54,6 +54,8 @@ CAUSE_SHED = 4           # router overload valve
 CAUSE_LOST = 5           # no live node at dispatch time
 CAUSE_DROP_REPLAY = 6    # hopeless after failover/hand-back replay
 CAUSE_DROP_PARENT = 7    # DAG cascade: a parent stage failed
+CAUSE_DROP_RETRY = 8     # retry budget spent / deadline-aware shed (ISSUE 9)
+CAUSE_BROWNOUT = 9       # brownout ladder denied admission (ISSUE 9)
 
 CAUSE_NAMES = {
     CAUSE_NONE: "none",
@@ -64,6 +66,8 @@ CAUSE_NAMES = {
     CAUSE_LOST: "lost",
     CAUSE_DROP_REPLAY: "drop_replay_budget",
     CAUSE_DROP_PARENT: "drop_parent_failed",
+    CAUSE_DROP_RETRY: "drop_retry_budget",
+    CAUSE_BROWNOUT: "brownout_shed",
 }
 
 

@@ -78,6 +78,15 @@ from repro.simulator.trace import COMPLETED, DROPPED, PENDING, UNSERVED, \
 # reorganizations apply before ticks observe, and wakes run last.
 ARRIVAL, COMPLETE, APPLY, TICK, WAKE = 0, 1, 2, 3, 4
 
+_INF = float("inf")
+
+#: local-only status sentinel for rows revoked by a crash or migration
+#: hand-back (ISSUE 9).  Never written to the shared trace: the masked
+#: scatter/sync paths skip these rows entirely, so the fabric's replay
+#: dispatch (which may create a *new* local row for the same global id,
+#: possibly on this same engine) stays the single writer.
+EVICTED_LOCAL = 255
+
 
 @dataclasses.dataclass
 class EngineConfig:
@@ -120,6 +129,17 @@ class EngineConfig:
     #: granularity.  Smaller = new prefills join the pool sooner (better
     #: TTFT under load), larger = fewer simulator events.
     decode_quantum: int = 8
+    #: fault injection (ISSUE 9): sorted, non-overlapping ``(t0, t1)``
+    #: node-down windows (``t1`` may be ``inf`` for a permanent crash).
+    #: Inside a window no batch launches — walkers park and wake at the
+    #: window end; the fabric's chaos loop evicts queued/in-flight work
+    #: at the window start via :meth:`EventHeapEngine.crash_evict`.
+    outages: tuple = ()
+    #: straggler windows ``(t0, t1, factor)``: every launch whose start
+    #: falls inside a window runs ``factor``× slower.  The inflation is
+    #: stamped into the timeline's interference column (it is a
+    #: co-location-shaped slowdown), keeping attribution exact.
+    slowdowns: tuple = ()
 
 
 class _IdxQueue:
@@ -309,6 +329,16 @@ class EventHeapEngine:
         # hoisted config flags (read per routed request)
         self._preempt_on = self.cfg.preemption
         self._log_on = self.cfg.event_log
+        # fault injection (chaos serving): outage/straggler windows and
+        # the local->global id map + eviction bookkeeping.  All three
+        # flags are False/zero on a faults-off run, so every hot path
+        # below stays byte-identical to the legacy engine.
+        self._outages = tuple(self.cfg.outages)
+        self._outage_on = bool(self._outages)
+        self._slowdowns = tuple(self.cfg.slowdowns)
+        self._slow_on = bool(self._slowdowns)
+        self._gid_l: list[int] = []
+        self._n_evicted = 0
         if schedule is not None:
             self._install(schedule)
 
@@ -395,6 +425,7 @@ class EventHeapEngine:
         self._done_l: list[float] = [np.nan] * n
         self._status_l: list[int] = [PENDING] * n
         self._preempted_l: list[bool] = [False] * n
+        self._gid_l = self._gidx.tolist()
         self._done = self._status = self._preempted = None
         self._prof_by_mid = [self.profiles.get(m) for m in tr.models]
         self._streams_on = bool(tr.has_streams)
@@ -443,29 +474,47 @@ class EventHeapEngine:
         tr = self.trace
         g = self._gidx
         self._finalize_arrays()
-        tr.completion_ms[g] = self._done
-        tr.status[g] = self._status
-        tr.preempted[g] |= self._preempted
+        done, status, preempted = self._done, self._status, self._preempted
+        keep = None
+        if self._n_evicted:
+            # crash-evicted rows were (or will be) re-dispatched by the
+            # fabric — possibly back onto this very engine as a fresh
+            # local row — so the dead rows must not write anything back
+            keep = status != EVICTED_LOCAL
+            g = g[keep]
+            done, status, preempted = done[keep], status[keep], \
+                preempted[keep]
+        tr.completion_ms[g] = done
+        tr.status[g] = status
+        tr.preempted[g] |= preempted
         if self._streams_on:
-            tr.first_token_ms[g] = np.asarray(self._ftok_l,
-                                              dtype=np.float64)
-            tr.tokens_done[g] = np.asarray(self._tok_l, dtype=np.int32)
+            ftok = np.asarray(self._ftok_l, dtype=np.float64)
+            tok = np.asarray(self._tok_l, dtype=np.int32)
+            if keep is not None:
+                ftok, tok = ftok[keep], tok[keep]
+            tr.first_token_ms[g] = ftok
+            tr.tokens_done[g] = tok
         if self._tl_on:
             tl = tr.obs
-            tl.first_launch_ms[g] = np.asarray(self._tlf_l,
-                                               dtype=np.float64)
-            tl.last_launch_ms[g] = np.asarray(self._tll_l,
-                                              dtype=np.float64)
-            tl.intf_ms[g] = np.asarray(self._tli_l, dtype=np.float64)
-            tl.decode_intf_ms[g] = np.asarray(self._tld_l,
-                                              dtype=np.float64)
+            tlf = np.asarray(self._tlf_l, dtype=np.float64)
+            tll = np.asarray(self._tll_l, dtype=np.float64)
+            tli = np.asarray(self._tli_l, dtype=np.float64)
+            tld = np.asarray(self._tld_l, dtype=np.float64)
             # completed rows close at their completion stamp; everything
             # else closed at its drop decision (stamped in the walk/sweeps)
             res = np.asarray(self._tlr_l, dtype=np.float64)
             cau = np.asarray(self._tlc_l, dtype=np.uint8)
-            comp = self._status == COMPLETED
-            res[comp] = self._done[comp]
+            if keep is not None:
+                tlf, tll, tli, tld = tlf[keep], tll[keep], tli[keep], \
+                    tld[keep]
+                res, cau = res[keep], cau[keep]
+            comp = status == COMPLETED
+            res[comp] = done[comp]
             cau[comp] = CAUSE_COMPLETED
+            tl.first_launch_ms[g] = tlf
+            tl.last_launch_ms[g] = tll
+            tl.intf_ms[g] = tli
+            tl.decode_intf_ms[g] = tld
             tl.resolve_ms[g] = res
             tl.cause[g] = cau
         if self._pending_objs:
@@ -739,6 +788,140 @@ class EventHeapEngine:
         rt.pending = True
         self._push(rt.t, WAKE, self.epoch, rt.idx)
 
+    # ---- fault injection (ISSUE 9 chaos serving) --------------------------
+
+    def _outage_end(self, t: float) -> float | None:
+        """End of the outage window covering ``t``, or None when up."""
+        for t0, t1 in self._outages:
+            if t < t0:
+                return None
+            if t < t1:
+                return t1
+        return None
+
+    def _slow_factor(self, t: float) -> float:
+        for t0, t1, f in self._slowdowns:
+            if t0 <= t < t1:
+                return f
+        return 1.0
+
+    def _park(self, rt: _LetRt, t: float, slot: int, cycle_start: float,
+              oe: float) -> None:
+        """Park a walker through an outage window; wake at the window end.
+
+        The walker's local clock jumps to the window end (nothing can
+        launch in between), so the wake re-enters the walk past the
+        window — or straight into a chained one, which parks it again.
+        A permanent crash (``oe == inf``) parks forever: ``pending``
+        stays set so kicks no-op, and no wake event is ever scheduled.
+        """
+        rt.slot = slot
+        rt.cycle_start = cycle_start
+        rt.pending = True
+        if oe == _INF:
+            rt.t = t
+            return
+        rt.t = oe if oe > t else t
+        self._push(oe, WAKE, self.epoch, rt.idx)
+
+    def _evict_local(self, i: int) -> None:
+        self._done_l[i] = np.nan
+        self._status_l[i] = EVICTED_LOCAL
+        if self._streams_on:
+            self._ftok_l[i] = np.nan
+            self._tok_l[i] = 0
+        if self._tl_on:
+            self._tlr_l[i] = np.nan
+            self._tlc_l[i] = 0
+        self._n_evicted += 1
+
+    def crash_evict(self, t_ms: float) -> np.ndarray:
+        """A crash at ``t_ms``: every request this engine still owes dies.
+
+        Revokes in-flight launch stamps (completions beyond ``t_ms``
+        cannot have happened — the silicon went away mid-batch), drains
+        every queue and decode pool, and marks the lot with a local
+        EVICTED sentinel that masks them out of ``sync_trace`` /
+        ``_scatter_back`` / ``metrics``.  Returns the *global* ids of the
+        evicted rows so the fabric can account the casualties and decide
+        replay; the same global id may later be re-dispatched here (a new
+        local row), and the masked scatter keeps exactly one writer.
+        """
+        if not self._bound:
+            self._bind_trace()
+        out: list[int] = []
+        gid_l = self._gid_l
+        status_l = self._status_l
+        # 1) in-flight work: completion stamps beyond the crash instant
+        done_arr = np.asarray(self._done_l, dtype=np.float64)
+        with np.errstate(invalid="ignore"):
+            hit = np.flatnonzero(done_arr > t_ms)
+        for i in hit.tolist():
+            if status_l[i] == COMPLETED:
+                self._evict_local(i)
+                out.append(gid_l[i])
+        # 2) queued + pooled work, and the walkers' in-flight state
+        for rt in self.lets:
+            for q in rt.qlist:
+                buf = q.buf
+                for j in range(q.head, len(buf)):
+                    i = buf[j]
+                    if status_l[i] == PENDING:
+                        self._evict_local(i)
+                        out.append(gid_l[i])
+                buf.clear()
+                q.pri.clear()
+                q.head = 0
+            for dm in rt.dstreams.values():
+                for e in dm:
+                    i = e[0]
+                    if status_l[i] == PENDING:
+                        self._evict_local(i)
+                        out.append(gid_l[i])
+                dm.clear()
+            rt.gen += 1        # any pending COMPLETE is stale
+            rt.inflight = None
+            rt.inflight_reqs = None
+            rt.pending = False
+            if rt.t < t_ms:
+                rt.t = t_ms
+            if rt.idle_floor < t_ms:
+                rt.idle_floor = t_ms
+        # 3) rows parked for a model the live schedule doesn't serve
+        for q in self.unrouted.values():
+            buf = q.buf
+            for j in range(q.head, len(buf)):
+                i = buf[j]
+                if status_l[i] == PENDING:
+                    self._evict_local(i)
+                    out.append(gid_l[i])
+            buf.clear()
+            q.pri.clear()
+            q.head = 0
+        return np.asarray(out, dtype=np.int64)
+
+    def evict_unrouted(self, mids) -> np.ndarray:
+        """Pull queued rows of the given models out of ``unrouted``.
+
+        The chaos loop's migration hand-back: a donor's removed model
+        parks its queued requests in ``unrouted`` at the cut; this
+        returns their global ids (marking the local rows EVICTED) so the
+        fabric can replay them onto the model's new home.
+        """
+        if not self._bound:
+            return np.empty(0, dtype=np.int64)
+        out: list[int] = []
+        status_l, gid_l = self._status_l, self._gid_l
+        for mid in mids:
+            q = self.unrouted.pop(int(mid), None)
+            if q is None:
+                continue
+            for i in q.drain():
+                if status_l[i] == PENDING:
+                    self._evict_local(i)
+                    out.append(gid_l[i])
+        return np.asarray(out, dtype=np.int64)
+
     # ---- the duty-cycle walk ----------------------------------------------
 
     def _walk(self, rt: _LetRt) -> None:
@@ -773,10 +956,17 @@ class EventHeapEngine:
             tlr_l, tlc_l = self._tlr_l, self._tlc_l
         else:
             tlf_l = tll_l = tli_l = tlr_l = tlc_l = None
+        outage_on = self._outage_on
+        slow_on = self._slow_on
         t = rt.t                      # local mirrors of the walker clock
         slot = rt.slot
         cycle_start = rt.cycle_start
         while True:
+            if outage_on:
+                oe = self._outage_end(t)
+                if oe is not None:
+                    self._park(rt, t, slot, cycle_start, oe)
+                    return
             if slot >= n:
                 # cycle finished.  Nexus dispatch rule (§5): start the next
                 # cycle immediately if some model's batch is already full,
@@ -870,6 +1060,8 @@ class EventHeapEngine:
                 exec_ms = self._intf(rt, mid, nb, t) * base
             else:
                 exec_ms = base
+            if slow_on:
+                exec_ms *= self._slow_factor(t)
             done = t + exec_ms
             if self._preempt_on:
                 pri_l = self._pri_l
@@ -952,10 +1144,17 @@ class EventHeapEngine:
             tld_l, tlr_l, tlc_l = self._tld_l, self._tlr_l, self._tlc_l
         else:
             tlf_l = tll_l = tli_l = tld_l = tlr_l = tlc_l = None
+        outage_on = self._outage_on
+        slow_on = self._slow_on
         t = rt.t
         slot = rt.slot
         cycle_start = rt.cycle_start
         while True:
+            if outage_on:
+                oe = self._outage_end(t)
+                if oe is not None:
+                    self._park(rt, t, slot, cycle_start, oe)
+                    return
             if slot >= n:
                 nxt = cycle_start + rt.duty
                 if t > nxt:
@@ -1036,6 +1235,8 @@ class EventHeapEngine:
                     exec_ms = self._intf(rt, mid, nb, t) * step * k
                 else:
                     exec_ms = step * k
+                if slow_on:
+                    exec_ms *= self._slow_factor(t)
                 done = t + exec_ms
                 keep = []
                 for e in batch:
@@ -1123,6 +1324,8 @@ class EventHeapEngine:
                 exec_ms = self._intf(rt, mid, nb, t) * base
             else:
                 exec_ms = base
+            if slow_on:
+                exec_ms *= self._slow_factor(t)
             done = t + exec_ms
             dm = rt.dstreams.get(mid)
             if dm is None:
@@ -1458,6 +1661,7 @@ class EventHeapEngine:
         self._done_l.extend([np.nan] * k)
         self._status_l.extend([PENDING] * k)
         self._preempted_l.extend([False] * k)
+        self._gid_l.extend(g.tolist())
         if self._streams_on:
             self._plen_l.extend(tr.prompt_len[g].tolist())
             self._olen_l.extend(tr.output_len[g].tolist())
@@ -1556,8 +1760,13 @@ class EventHeapEngine:
         if not g.size:
             return
         tr = self.trace
-        tr.completion_ms[g] = np.asarray(self._done_l, dtype=np.float64)
-        tr.status[g] = np.asarray(self._status_l, dtype=np.uint8)
+        done = np.asarray(self._done_l, dtype=np.float64)
+        status = np.asarray(self._status_l, dtype=np.uint8)
+        if self._n_evicted:
+            keep = status != EVICTED_LOCAL
+            g, done, status = g[keep], done[keep], status[keep]
+        tr.completion_ms[g] = done
+        tr.status[g] = status
 
     def finish(self) -> SimMetrics:
         """Drain an incremental run and close the books (== run()'s end).
@@ -1612,7 +1821,15 @@ class EventHeapEngine:
         if not self._bound:
             self._bind_trace()
         self._finalize_arrays()
-        return collect_arrays(self.trace.models, self._mid, self._arr,
-                              self._slo, self._done, self._status,
-                              self._pri, self._preempted,
+        mid, arr, slo = self._mid, self._arr, self._slo
+        done, status = self._done, self._status
+        pri, preempted = self._pri, self._preempted
+        if self._n_evicted:
+            keep = status != EVICTED_LOCAL
+            mid, arr, slo = mid[keep], arr[keep], slo[keep]
+            done, status = done[keep], status[keep]
+            pri, preempted = pri[keep], preempted[keep]
+        return collect_arrays(self.trace.models, mid, arr,
+                              slo, done, status,
+                              pri, preempted,
                               self.cfg.horizon_ms, busy)

@@ -1,0 +1,424 @@
+"""Fault-injection + recovery suite (ISSUE 9).
+
+The load-bearing invariants of the chaos serving loop:
+
+  * **Conservation under arbitrary storms** — seeded fault schedules
+    mixing transient crashes, permanent crashes, stragglers, and network
+    degradation leave every request in exactly one terminal status, with
+    no double-serve (the dispatch-slice multiset audit from the
+    migration suite), both with recovery on and in the naive arm.
+  * **Faults off == PR-8** — carrying the chaos knobs in the config
+    while ``faults=None`` replays the SoA goldens byte-identically.
+  * **Attribution survives chaos** — the timeline identity
+    ``slo0 - slo == net + handback + failover`` holds exactly under
+    replays, backoff burns, and degraded RPC; miss components still sum
+    to each overshoot.
+  * **Recovery earns its keep** — on a fixed benchmark storm the full
+    recovery stack (health eviction + retry budgets + brownout) beats
+    naive flat-lag failover on gold violations.
+
+Plus unit coverage for the faults package itself: plan validation, the
+detector state machine (including the failed-probe cooldown re-arm),
+retry backoff arithmetic, and brownout hysteresis.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from soa_scenarios import _fabric_cases, fabric_record, fingerprint
+from test_migration import _audit_single_serve
+from repro.core import calibrate_profiles
+from repro.core.scenarios import (FabricScenario, drifting_zipf_scenario,
+                                  fabric_node_sweep,
+                                  streaming_zipf_scenario)
+from repro.fabric import (FabricConfig, FaultPlan, HealthDetector,
+                          HealthParams, NetworkDegradation, PermanentCrash,
+                          RetryPolicy, StragglerWindow, TransientCrash,
+                          build_fabric, build_stream_fabric,
+                          build_stream_trace_soa, build_trace,
+                          build_trace_soa, chaos_plan)
+from repro.faults import (BrownoutController, BrownoutParams, RetryLedger,
+                          epoch_pressure)
+from repro.faults.health import EVICTED, HEALTHY
+from repro.simulator.trace import COMPLETED, PENDING
+
+PROFS = calibrate_profiles()
+
+GOLDENS = json.load(open(os.path.join(
+    os.path.dirname(__file__), "goldens", "soa_metrics.json")))
+
+
+def _chaos_cfg(plan, **kw) -> FabricConfig:
+    base = dict(horizon_ms=8_000.0, preemption=True, faults=plan)
+    base.update(kw)
+    return FabricConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan construction and validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_malformed_schedules():
+    with pytest.raises(ValueError, match="negative crash"):
+        FaultPlan((PermanentCrash(node_id=0, t_ms=-1.0),))
+    with pytest.raises(ValueError, match="two permanent crashes"):
+        FaultPlan((PermanentCrash(0, 100.0), PermanentCrash(0, 200.0)))
+    with pytest.raises(ValueError, match="overlapping outage"):
+        FaultPlan((TransientCrash(0, 100.0, down_ms=300.0),
+                   TransientCrash(0, 200.0, down_ms=100.0)))
+    with pytest.raises(ValueError, match="factor must be >= 1"):
+        FaultPlan((StragglerWindow(0, 0.0, 100.0, factor=0.5),))
+    with pytest.raises(ValueError, match="loss_prob"):
+        FaultPlan((NetworkDegradation(0.0, 100.0, loss_prob=1.0),))
+    with pytest.raises(ValueError, match="permanent crash"):
+        FaultPlan((PermanentCrash(0, 100.0),
+                   StragglerWindow(0, 200.0, 300.0, factor=2.0)))
+    with pytest.raises(TypeError, match="unknown fault"):
+        FaultPlan(("not-a-fault",))
+
+
+def test_fault_plan_window_queries():
+    plan = FaultPlan((
+        TransientCrash(0, 1_000.0, down_ms=500.0, rewarm_ms=100.0),
+        PermanentCrash(1, 3_000.0),
+        StragglerWindow(2, 2_000.0, 4_000.0, factor=2.0),
+        NetworkDegradation(500.0, 900.0, extra_ms=5.0, loss_prob=0.05),
+    ))
+    assert plan.outage_windows(0) == ((1_000.0, 1_600.0),)
+    assert plan.outage_windows(1) == ((3_000.0, float("inf")),)
+    assert plan.outage_windows(2) == ()
+    assert plan.down_at(0, 1_000.0) and plan.down_at(0, 1_599.0)
+    assert not plan.down_at(0, 1_600.0)
+    assert plan.down_at(1, 1e12), "permanent crashes never end"
+    assert plan.permanent_crash_ms() == {1: 3_000.0}
+    assert plan.straggler_windows(2) == ((2_000.0, 4_000.0, 2.0),)
+    assert plan.net_windows() == ((500.0, 900.0, 5.0, 0.05),)
+    # boundary instants: only the finite edges, sorted
+    assert plan.boundary_instants() == (500.0, 900.0, 1_000.0, 1_600.0,
+                                        2_000.0, 3_000.0, 4_000.0)
+
+
+def test_chaos_plan_generator_is_seed_deterministic():
+    a = chaos_plan(4, 10_000.0, seed=3, n_transient=2, n_permanent=1)
+    b = chaos_plan(4, 10_000.0, seed=3, n_transient=2, n_permanent=1)
+    assert a == b
+    assert a != chaos_plan(4, 10_000.0, seed=4, n_transient=2,
+                           n_permanent=1)
+    with pytest.raises(ValueError, match="more crashes than nodes"):
+        chaos_plan(1, 10_000.0, n_transient=1, n_permanent=1)
+
+
+def test_scenario_rejects_malformed_failure_schedules():
+    ok = dict(name="v", n_nodes=2, rates={"goo": 50.0})
+    with pytest.raises(ValueError, match="negative"):
+        FabricScenario(fail_at_s=((0, -1.0),), **ok)
+    with pytest.raises(ValueError, match="node"):
+        FabricScenario(fail_at_s=((5, 1.0),), **ok)
+    with pytest.raises(ValueError, match="twice"):
+        FabricScenario(fail_at_s=((0, 1.0), (0, 2.0)), **ok)
+    scn = FabricScenario(fail_at_s=((0, 30.0),), **ok)
+    with pytest.warns(UserWarning, match="never fires"):
+        build_trace_soa(scn, PROFS, 10.0, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# detector / retry / brownout unit behavior
+# ---------------------------------------------------------------------------
+
+def test_health_detector_hard_failure_and_probe_rearm():
+    det = HealthDetector([0, 1], HealthParams(probe_after_ms=500.0))
+    # hard failure (outcomes, zero successes) evicts in one epoch
+    det.observe(0, 1_000.0, ok=0, failed=8)
+    assert det.state[0] == EVICTED and det.n_evicted() == 1
+    assert not det.routable(0, 1_200.0)
+    assert det.routable(0, 1_500.0), "probe allowed after the cooldown"
+    # a failed probe re-arms the cooldown: still-bad nodes do not become
+    # permanently routable once the first cooldown elapses
+    det.observe(0, 1_600.0, ok=0, failed=1)
+    assert not det.routable(0, 1_700.0)
+    assert det.routable(0, 2_100.0)
+    # successful probes decay the score back below reinstate -> HEALTHY
+    t = 2_100.0
+    while det.state[0] == EVICTED:
+        det.observe(0, t, ok=4, failed=0)
+        t += 100.0
+    assert det.state[0] == HEALTHY
+    assert det.routable(0, t)
+    # the event log tells the whole story in order
+    kinds = [k for _, n, k in det.events if n == 0]
+    assert kinds == ["evicted", "healthy"]
+    # node 1 saw no evidence: untouched
+    assert det.state[1] == HEALTHY and det.score[1] == 0.0
+
+
+def test_health_detector_idle_epochs_carry_no_evidence():
+    det = HealthDetector([0])
+    det.observe(0, 100.0, ok=0, failed=5)
+    assert det.state[0] == EVICTED
+    for t in range(200, 5_000, 100):
+        det.observe(0, float(t), ok=0, failed=0)
+    assert det.state[0] == EVICTED, "idle is not healthy, only unobserved"
+
+
+def test_retry_policy_backoff_and_ledger():
+    pol = RetryPolicy(max_retries=3, backoff_base_ms=10.0,
+                      backoff_factor=2.0)
+    np.testing.assert_allclose(pol.lag_ms(np.array([0, 1, 2])),
+                               [10.0, 20.0, 40.0])
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    led = RetryLedger()
+    assert led.counts([7, 9]).tolist() == [0, 0]
+    led.bump(np.array([7, 9]))
+    led.bump(np.array([7]))
+    assert led.counts([7, 9, 11]).tolist() == [2, 1, 0]
+    assert led.total_attempts == 3
+
+
+def _pressure(x, n=10):
+    missed = np.zeros(n, dtype=bool)
+    missed[:int(round(x * n))] = True
+    return {"gold_total": n, "gold_missed": int(missed.sum()),
+            "pressure": x, "missed_mask": missed}
+
+
+def test_brownout_ladder_hysteresis():
+    ctl = BrownoutController(BrownoutParams(enter=0.10, exit=0.02,
+                                            patience=3))
+    # two hot epochs are not enough; the third escalates
+    assert ctl.on_epoch(100.0, _pressure(0.5)) == 0
+    assert ctl.on_epoch(200.0, _pressure(0.5)) == 0
+    assert ctl.on_epoch(300.0, _pressure(0.5)) == 1
+    # a single calm epoch resets the streak, no flapping
+    assert ctl.on_epoch(400.0, _pressure(0.05)) == 1
+    assert ctl.on_epoch(500.0, _pressure(0.5)) == 1
+    # sustained pressure climbs one rung per patience window, capped
+    for k in range(20):
+        ctl.on_epoch(600.0 + 100 * k, _pressure(0.5))
+    assert ctl.level == ctl.params.max_level
+    # sustained calm steps back down one rung at a time
+    lvl = ctl.level
+    for k in range(3):
+        ctl.on_epoch(3_000.0 + 100 * k, _pressure(0.0))
+    assert ctl.level == lvl - 1
+    # epochs with no gold evidence decay, never escalate
+    ctl2 = BrownoutController(BrownoutParams(patience=2))
+    empty = {"gold_total": 0, "gold_missed": 0, "pressure": 0.0,
+             "missed_mask": np.zeros(0, dtype=bool)}
+    for k in range(10):
+        ctl2.on_epoch(100.0 * k, empty)
+    assert ctl2.level == 0
+
+
+def test_epoch_pressure_counts_only_the_window():
+    scn = fabric_node_sweep(node_counts=(2,))[0]
+    trace = build_trace_soa(scn, PROFS, 6.0, seed=2)
+    fabric = build_fabric(scn, PROFS, FabricConfig(horizon_ms=6_000.0))
+    from repro.obs import attach_timeline
+    attach_timeline(trace)
+    fabric.serve_trace(trace)
+    whole = epoch_pressure(trace, 0.0, 1e12)
+    assert whole["gold_total"] > 0
+    halves = [epoch_pressure(trace, 0.0, 3_000.0),
+              epoch_pressure(trace, 3_000.0, 1e12)]
+    assert sum(h["gold_total"] for h in halves) == whole["gold_total"]
+    assert sum(h["gold_missed"] for h in halves) == whole["gold_missed"]
+
+
+# ---------------------------------------------------------------------------
+# conservation under seeded storms (the chaos property suite)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_nodes=st.sampled_from([2, 3]),
+       n_permanent=st.sampled_from([0, 1]),
+       recovery=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_chaos_conservation_property(seed, n_nodes, n_permanent, recovery):
+    """Arbitrary seeded storms (transient crash + straggler + degraded
+    net, preemption on): one terminal status each, no double-serve, and
+    the timeline budget identity holds exactly."""
+    horizon_s = 8.0
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    plan = chaos_plan(n_nodes, horizon_s * 1e3, seed=seed,
+                      n_transient=1, n_permanent=n_permanent,
+                      n_stragglers=1, n_net=1)
+    cfg = _chaos_cfg(plan, recovery=recovery)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    from repro.obs import attach_timeline
+    attach_timeline(trace)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.total == len(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+    # SLO-budget ledger identity, exact under replays and backoff burns
+    tl = trace.obs
+    np.testing.assert_allclose(
+        tl.slo0_ms - trace.slo_ms,
+        tl.net_ms + tl.handback_ms + tl.failover_ms,
+        atol=1e-6)
+    assert fm.chaos is not None
+    assert fm.chaos["recovery"] == recovery
+    if not recovery:
+        assert fm.chaos["detector"] is None
+        assert fm.chaos["brownout"] is None
+
+
+def test_chaos_attribution_components_sum_to_each_overshoot():
+    """PR-8's exactness criterion survives the chaos machinery: for every
+    completed miss, the five components sum to the overshoot."""
+    n_nodes, horizon_s, seed = 3, 8.0, 7
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    plan = chaos_plan(n_nodes, horizon_s * 1e3, seed=seed,
+                      n_transient=1, n_permanent=1)
+    fabric = build_fabric(scn, PROFS, _chaos_cfg(plan))
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    from repro.obs import COMPONENTS, attach_timeline, attribution_arrays
+    attach_timeline(trace)
+    fabric.serve_trace(trace)
+    arrs = attribution_arrays(trace)
+    miss = arrs["miss"] & (trace.status == COMPLETED)
+    assert miss.sum() > 0, "a storm this size must hurt someone"
+    total = sum(arrs[c][miss] for c in COMPONENTS)
+    np.testing.assert_allclose(total, arrs["overshoot_ms"][miss],
+                               atol=1e-6)
+
+
+def test_chaos_with_migrations_conserves():
+    """The chaos loop and the migration epoch loop compose: placement
+    moves mid-storm, hand-backs replay, nothing vanishes."""
+    horizon_s = 12.0
+    scn = drifting_zipf_scenario(3, horizon_s=horizon_s, n_phases=2,
+                                 skew=2.2, util=1.0)
+    plan = chaos_plan(3, horizon_s * 1e3, seed=5, n_transient=1,
+                      n_permanent=0, n_stragglers=1, n_net=1)
+    cfg = _chaos_cfg(plan, horizon_ms=horizon_s * 1e3, migrations=True,
+                     migration_period_ms=2_000.0,
+                     max_migrations_per_epoch=3)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=5)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+    assert fm.migrations > 0, "drift this hard must trigger migrations"
+
+
+def test_chaos_streaming_trace_conserves():
+    """Streaming rows (prefill/decode phases) survive crash eviction and
+    replay: decode pools drain, no stream is double-served."""
+    horizon_s = 8.0
+    scn = streaming_zipf_scenario(2, util=0.7)
+    plan = chaos_plan(2, horizon_s * 1e3, seed=11, n_transient=1,
+                      n_permanent=0, n_stragglers=1, n_net=1)
+    cfg = _chaos_cfg(plan, horizon_ms=horizon_s * 1e3)
+    fabric = build_stream_fabric(scn, PROFS, cfg)
+    trace = build_stream_trace_soa(scn, PROFS, horizon_s, seed=11)
+    fm = fabric.serve_trace(trace)
+    assert trace.has_streams
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+
+
+def test_transient_crash_node_is_evicted_then_reinstated():
+    """A controlled single-fault storm: the victim is evicted from
+    observed outcomes alone, probed after the cooldown, reinstated, and
+    completes fresh work after the outage ends."""
+    horizon_ms = 10_000.0
+    out_end = 4_000.0 + 1_500.0 + 100.0
+    plan = FaultPlan((TransientCrash(0, 4_000.0, down_ms=1_500.0,
+                                     rewarm_ms=100.0),))
+    scn = fabric_node_sweep(node_counts=(3,))[0]
+    fabric = build_fabric(scn, PROFS, _chaos_cfg(
+        plan, horizon_ms=horizon_ms))
+    trace = build_trace_soa(scn, PROFS, horizon_ms / 1e3, seed=3)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    kinds = [k for _, n, k in fm.chaos["detector"]["events"] if n == 0]
+    assert "evicted" in kinds, "the crash must be detected, not known"
+    assert kinds[-1] == "healthy", "the node must earn its way back"
+    assert fm.chaos["detector"]["final_state"]["0"] == "healthy"
+    # and the reinstated node really served post-outage work
+    from repro.fabric.fabric import ServingFabric
+    assert ServingFabric._node_ok(fabric.nodes[0], out_end, 1e12) > 0
+
+
+def test_recovery_beats_naive_on_the_benchmark_storm():
+    """The fig_chaos contrast, pinned: on a fixed storm the recovery
+    stack strictly beats naive flat-lag failover on gold violations."""
+    horizon_s, n_nodes, seed = 8.0, 3, 7
+    scn = fabric_node_sweep(node_counts=(n_nodes,))[0]
+    plan = chaos_plan(n_nodes, horizon_s * 1e3, seed=seed,
+                      n_transient=1, n_permanent=1, n_stragglers=1,
+                      n_net=1)
+    gold_viol = {}
+    for recovery in (False, True):
+        fabric = build_fabric(scn, PROFS,
+                              _chaos_cfg(plan, recovery=recovery))
+        trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+        fm = fabric.serve_trace(trace)
+        assert np.all(trace.status != PENDING)
+        gold_viol[recovery] = fm.fleet.per_class[0]["violations"]
+    assert gold_viol[True] < gold_viol[False]
+
+
+def test_chaos_is_seed_deterministic():
+    """Same plan + same trace seed -> byte-identical chaos outcome."""
+    def run():
+        scn = fabric_node_sweep(node_counts=(3,))[0]
+        plan = chaos_plan(3, 8_000.0, seed=9, n_transient=1,
+                          n_permanent=0, n_stragglers=1, n_net=1)
+        fabric = build_fabric(scn, PROFS, _chaos_cfg(plan))
+        trace = build_trace_soa(scn, PROFS, 8.0, seed=9)
+        fm = fabric.serve_trace(trace)
+        return (fingerprint(trace.views()), fm.chaos["retries"],
+                fm.chaos["retry_drops"], fm.chaos["net_lost"],
+                fm.chaos["detector"]["events"])
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# faults off == PR-8 goldens, byte-identical
+# ---------------------------------------------------------------------------
+
+def test_chaos_knobs_off_reproduce_pr8_goldens():
+    """Carrying every chaos knob at a non-default value changes nothing
+    while ``faults=None``: the SoA goldens replay byte-identically
+    (including the legacy fail-at path, which now routes through
+    FaultPlan normalization inside ``build``)."""
+    for name in ("fabric-4n", "fabric-faildrain", "fabric-hotspot-shed"):
+        scn, cfg, horizon_s, seed = _fabric_cases()[name]
+        cfg = dataclasses.replace(
+            cfg, faults=None, chaos_epoch_ms=123.0, rpc_timeout_ms=77.0,
+            recovery=False, retry=RetryPolicy(max_retries=5),
+            health=HealthParams(alpha=0.9),
+            brownout_params=BrownoutParams(enter=0.5))
+        fabric = build_fabric(scn, PROFS, cfg)
+        reqs = build_trace(scn, PROFS, horizon_s, seed=seed)
+        fm = fabric.serve(reqs)
+        assert fabric_record(reqs, fm) == GOLDENS[name], \
+            f"{name} diverged with chaos knobs present"
+
+
+def test_fail_at_and_faults_refuse_to_combine():
+    scn = fabric_node_sweep(node_counts=(2,))[0]
+    scn = dataclasses.replace(scn, fail_at_s=((0, 4.0),))
+    plan = FaultPlan((TransientCrash(1, 2_000.0, down_ms=500.0),))
+    with pytest.raises(ValueError, match="not both"):
+        build_fabric(scn, PROFS, _chaos_cfg(plan))
+
+
+def test_chaos_plan_node_ids_validated_against_fleet():
+    plan = FaultPlan((TransientCrash(7, 2_000.0, down_ms=500.0),))
+    scn = fabric_node_sweep(node_counts=(2,))[0]
+    with pytest.raises(ValueError, match="node"):
+        build_fabric(scn, PROFS, _chaos_cfg(plan))

@@ -11,6 +11,7 @@ The load-bearing invariants of the cluster-of-clusters layer:
     the preempting class.
 """
 import copy
+import dataclasses
 import math
 
 from hypothesis import given, settings, strategies as st
@@ -177,6 +178,90 @@ def test_fleet_down_losses_are_not_shed():
     assert _conserved(trace)
     assert fm.stats.lost.get(0, 0) > 0, "post-failure gold arrivals lost"
     assert 0 not in fm.stats.shed
+
+
+def test_failover_zero_lag_replays_at_the_death_instant():
+    """failover_ms=0: instant detection.  Casualties replay with their
+    full remaining budget (arrival == the failure instant), so far fewer
+    drop hopeless than under any positive lag — and conservation holds
+    at the degenerate point of the lag knob."""
+    scn = failure_drain_scenario(3, fail_at_s=5.0)
+    trace = build_trace(scn, PROFS, 15.0, seed=7)
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=15_000.0, preemption=True,
+                                 failover_ms=0.0))
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    assert fm.stats.failed_over > 0
+    fail_ms = scn.fail_at_s[0][1] * 1e3
+    # every replayed casualty re-arrives exactly at the death instant or
+    # at its own (later) client arrival — never before the failure
+    for ids in fabric.replayed_ids:
+        for r in (trace[int(i)] for i in ids):
+            assert r.arrival_ms >= fail_ms - 1e-9
+
+
+def test_two_nodes_dying_at_the_same_instant():
+    """Simultaneous deaths drain in one wave: both retire, both casualty
+    sets replay onto the lone survivor, nothing vanishes."""
+    base = failure_drain_scenario(3, fail_at_s=6.0)
+    scn = dataclasses.replace(base, fail_at_s=((0, 6.0), (1, 6.0)))
+    trace = build_trace(scn, PROFS, 15.0, seed=11)
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=15_000.0, preemption=True,
+                                 failover_ms=10.0))
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    assert fabric.nodes[0].retired and fabric.nodes[1].retired
+    assert not fabric.nodes[2].retired
+    # replays may only land on the survivor (the other victim is already
+    # retired when the first wave re-dispatches)
+    survivor = set(fabric.nodes[2].pending_idx)
+    for ids in fabric.replayed_ids:
+        routed = [int(i) for i in ids
+                  if trace[int(i)].completion_ms is not None]
+        assert all(i in survivor for i in routed)
+
+
+def test_node_dying_before_first_dispatch():
+    """A node dead at t=0 never serves anything: the fleet routes around
+    it from the first request and conservation holds."""
+    base = failure_drain_scenario(2, fail_at_s=5.0)
+    scn = dataclasses.replace(base, fail_at_s=((0, 0.0),))
+    trace = build_trace(scn, PROFS, 10.0, seed=13)
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=10_000.0, failover_ms=5.0))
+    fm = fabric.serve(trace)
+    assert _conserved(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    assert fabric.nodes[0].retired
+    dead = fm.per_node.get(0)
+    assert dead is None or dead.completed == 0
+
+
+def test_per_node_outcomes_partition_the_fleet_totals():
+    """Per-node tallies are a partition, not an overlay: completions sum
+    exactly to the fleet's, and the rows missing from every node slice
+    are precisely the router-resolved ones (shed/lost) plus the hopeless
+    replay drops the fabric shed without re-dispatching."""
+    scn = failure_drain_scenario(3, fail_at_s=5.0)
+    trace = build_trace(scn, PROFS, 15.0, seed=7)
+    fabric = build_fabric(
+        scn, PROFS, FabricConfig(horizon_ms=15_000.0, preemption=True,
+                                 failover_ms=10.0))
+    fm = fabric.serve(trace)
+    node_completed = sum(m.completed for m in fm.per_node.values())
+    node_total = sum(m.total for m in fm.per_node.values())
+    assert node_completed == fm.fleet.completed, \
+        "a completion was counted on two nodes (or vanished)"
+    # rows in no node slice are exactly the router-resolved ones plus the
+    # hopeless replay drops the fabric shed without re-dispatching
+    missing = fm.fleet.total - node_total
+    router_resolved = fm.shed_total() + sum(fm.stats.lost.values())
+    assert missing >= router_resolved
+    assert fm.stats.failed_over > 0, "vacuous unless casualties replayed"
 
 
 # ---------------------------------------------------------------------------
