@@ -1,0 +1,211 @@
+"""Reactive vs predictive fleet autoscaling on a flash crowd (ISSUE 10).
+
+The same seeded trace — a steady Zipf base mix plus a flash crowd on a
+nearly-cold model (trickle -> ramp -> peak -> gone) — is served twice
+with identical knobs except the forecast:
+
+  * **reactive** — ``predict_target`` with the trend zeroed: the
+    autoscaler only sees load that has already arrived, so new nodes
+    start their checkpoint-restore warm-up *after* the crowd is
+    already burning SLOs.
+  * **predictive** — the shared EWMA + within-window-growth forecast
+    extrapolates the ramp, so pre-warming (priced per node by the
+    ``RestoreCostModel``: model bytes / storage bandwidth, not a flat
+    constant) starts an epoch or more earlier and capacity is routable
+    when the peak lands.
+
+Both arms pay real restore cost and both scale back down once the crowd
+leaves (the stale-EWMA decay fix is what lets the forecast fall), so the
+comparison is attainment *and* efficiency: gold-class SLO attainment and
+goodput per node-hour.  Results merge into ``BENCH_fabric.json`` under
+the ``"autoscale"`` key.
+
+CLI: ``python -m benchmarks.fig_autoscale --tiny`` runs a 3-node CI
+smoke and exits non-zero on a conservation break or a predictive loss.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import (Row, add_trace_dir_arg, maybe_attach_timeline,
+                               maybe_dump_run, merge_bench_json,
+                               set_trace_dir, setup)
+from repro.core.scenarios import flash_crowd_scenario
+from repro.fabric import (FabricConfig, RestoreCostModel, build_fabric,
+                          build_trace_soa)
+from repro.fabric.priority import CLASS_NAMES
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fabric.json")
+
+HORIZON_S = 40.0
+NODE_COUNTS = (4,)
+TRACE_SEED = 11
+EPOCH_MS = 2_000.0
+
+
+def _scenario(n_nodes: int, horizon_s: float):
+    """Flash crowd with its phases scaled to the horizon: quiet for the
+    first 30%, ramping over 10%, peaking until 75%, then gone.  The
+    crowd is sized in *solver* capacity, not sweep units: a 4-GPU node
+    schedules ~1.6k vgg req/s, so ``9 * n_nodes`` sweep units (1.8k
+    req/s per fleet node) is a crowd the starting fleet genuinely
+    cannot host and the autoscaler must grow into."""
+    return flash_crowd_scenario(
+        n_nodes, horizon_s=horizon_s,
+        t0_s=0.30 * horizon_s, ramp_s=0.10 * horizon_s,
+        t1_s=0.75 * horizon_s, crowd_units=9.0 * n_nodes)
+
+
+def _cfg(mode: str, n_nodes: int, horizon_s: float) -> FabricConfig:
+    return FabricConfig(
+        horizon_ms=horizon_s * 1e3, policy="least-loaded",
+        preemption=True, migrations=True, migration_period_ms=EPOCH_MS,
+        autoscale=True, autoscale_mode=mode,
+        autoscale_min_nodes=n_nodes, autoscale_max_nodes=4 * n_nodes,
+        restore=RestoreCostModel.paper_default())
+
+
+def _serve(scn, profs, cfg, horizon_s: float, seed: int,
+           label: str | None = None) -> dict:
+    t0 = time.perf_counter()
+    fabric = build_fabric(scn, profs, cfg)
+    trace = build_trace_soa(scn, profs, horizon_s, seed=seed)
+    maybe_attach_timeline(trace)
+    fm = fabric.serve_trace(trace)
+    wall_s = time.perf_counter() - t0
+    if label:
+        maybe_dump_run(label, trace, fabric.nodes, cfg.horizon_ms,
+                       migration_events=fm.migration_events)
+    per_class = {}
+    for level, pc in sorted(fm.fleet.per_class.items()):
+        per_class[CLASS_NAMES.get(level, str(level))] = {
+            "total": pc["total"],
+            "violations": pc["violations"],
+            "slo_attainment": 1.0 - pc["violations"] / max(pc["total"], 1),
+        }
+    fl = fm.fleet
+    ok = fl.completed - (fl.slo_violations - fl.dropped)
+    node_hours = (fm.node_seconds or 0.0) / 3600.0
+    adds = [e for e in fm.scale_events if e.action == "add"]
+    drains = [e for e in fm.scale_events if e.action == "drain"]
+    return {
+        "requests": fl.total,
+        "completed": fl.completed,
+        "dropped": fl.dropped,
+        "conserved": fl.completed + fl.dropped == fl.total,
+        "goodput_req_s": fm.goodput_req_s,
+        "violation_rate": fm.violation_rate,
+        "per_class": per_class,
+        "node_hours": node_hours,
+        "goodput_per_node_hour": ok / node_hours if node_hours else 0.0,
+        "n_scale_up": len(adds),
+        "n_scale_down": len(drains),
+        "first_add_ms": min((e.t_ms for e in adds), default=None),
+        "peak_nodes": max(
+            (e.node_id + 1 for e in adds), default=None),
+        "warmup_ms": [round(e.warmup_ms, 1) for e in adds],
+        "scale_events": [
+            [e.t_ms, e.action, e.node_id, e.t_ready_ms,
+             round(e.warmup_ms, 1)] for e in fm.scale_events],
+        "wall_s": wall_s,
+    }
+
+
+def run_point(n_nodes: int, horizon_s: float = HORIZON_S,
+              seed: int = TRACE_SEED) -> dict:
+    """Serve the same flash-crowd trace under both forecast arms."""
+    profs, _intf, _ = setup()
+    scn = _scenario(n_nodes, horizon_s)
+    react = _serve(scn, profs, _cfg("reactive", n_nodes, horizon_s),
+                   horizon_s, seed, label=f"autoscale_{n_nodes}n_reactive")
+    pred = _serve(scn, profs, _cfg("predictive", n_nodes, horizon_s),
+                  horizon_s, seed, label=f"autoscale_{n_nodes}n_predictive")
+    return {
+        "n_nodes": n_nodes,
+        "horizon_s": horizon_s,
+        "trace_seed": seed,
+        "epoch_ms": EPOCH_MS,
+        "reactive": react,
+        "predictive": pred,
+        "gold_attainment_delta":
+            pred["per_class"]["gold"]["slo_attainment"]
+            - react["per_class"]["gold"]["slo_attainment"],
+        "goodput_per_node_hour_gain":
+            pred["goodput_per_node_hour"]
+            / max(react["goodput_per_node_hour"], 1e-9),
+    }
+
+
+def run(fast: bool = False) -> list[Row]:
+    node_counts = (4,) if fast else NODE_COUNTS
+    horizon_s = 20.0 if fast else HORIZON_S
+    points = [run_point(n, horizon_s) for n in node_counts]
+    if not fast:
+        payload = {
+            "benchmark": "autoscale_reactive_vs_predictive",
+            "horizon_s": HORIZON_S,
+            "trace_seed": TRACE_SEED,
+            "epoch_ms": EPOCH_MS,
+            "points": points,
+        }
+        merge_bench_json(OUT_PATH, "autoscale", payload)
+    rows = []
+    for p in points:
+        b, r = p["reactive"], p["predictive"]
+        rows.append(Row(
+            f"fabric/autoscale_{p['n_nodes']}n",
+            (b["wall_s"] + r["wall_s"]) * 1e6,
+            f"requests={b['requests']} "
+            f"gold_attain={100*b['per_class']['gold']['slo_attainment']:.2f}%"
+            f"->{100*r['per_class']['gold']['slo_attainment']:.2f}% "
+            f"goodput/nh={b['goodput_per_node_hour']:.0f}"
+            f"->{r['goodput_per_node_hour']:.0f} "
+            f"(x{p['goodput_per_node_hour_gain']:.2f}) "
+            f"ups={b['n_scale_up']}/{r['n_scale_up']} "
+            f"downs={b['n_scale_down']}/{r['n_scale_down']} "
+            f"first_add={b['first_add_ms']}/{r['first_add_ms']}ms"))
+    return rows
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="3-node CI smoke: conservation + predictive win")
+    add_trace_dir_arg(ap)
+    args = ap.parse_args()
+    set_trace_dir(args.trace_dir)
+    if not args.tiny:
+        for row in run():
+            print(row.csv())
+        return 0
+    p = run_point(3, horizon_s=20.0)
+    b, r = p["reactive"], p["predictive"]
+    print(f"autoscale-tiny n=3 requests={b['requests']} "
+          f"gold {100*b['per_class']['gold']['slo_attainment']:.2f}%->"
+          f"{100*r['per_class']['gold']['slo_attainment']:.2f}% "
+          f"goodput/nh {b['goodput_per_node_hour']:.0f}->"
+          f"{r['goodput_per_node_hour']:.0f} "
+          f"ups={b['n_scale_up']}/{r['n_scale_up']} "
+          f"downs={b['n_scale_down']}/{r['n_scale_down']}")
+    if not (b["conserved"] and r["conserved"]):
+        print("SMOKE FAIL: request conservation broken across scale cuts")
+        return 1
+    if not (b["n_scale_up"] and r["n_scale_up"]):
+        print("SMOKE FAIL: the flash crowd never triggered a scale-up")
+        return 1
+    if p["gold_attainment_delta"] < 0:
+        print("SMOKE FAIL: predictive lost gold-class SLO attainment "
+              "to reactive")
+        return 1
+    if p["goodput_per_node_hour_gain"] < 1.0:
+        print("SMOKE FAIL: predictive lost goodput-per-node-hour "
+              "to reactive")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,6 @@
 """Pytree checkpointing (npz + json manifest; no pickle)."""
-from repro.checkpoint.store import save_checkpoint, load_checkpoint
+from repro.checkpoint.store import (entry_nbytes, load_checkpoint,
+                                    manifest_nbytes, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "manifest_nbytes",
+           "entry_nbytes"]

@@ -48,6 +48,33 @@ def save_checkpoint(directory: str, tree, step: int | None = None) -> str:
     return npz_path
 
 
+def entry_nbytes(entry: dict) -> int:
+    """Stored bytes for one manifest entry.
+
+    bf16 leaves are stored as uint16 views (2 bytes/elem); numpy has no
+    ``bfloat16`` dtype, so map it explicitly instead of via ``np.dtype``.
+    """
+    n = 1
+    for d in entry["shape"]:
+        n *= int(d)
+    dtype = entry["dtype"]
+    itemsize = 2 if dtype == "bfloat16" else np.dtype(dtype).itemsize
+    return n * itemsize
+
+
+def manifest_nbytes(directory: str, step: int | None = None) -> int:
+    """Total checkpoint bytes recorded by a saved manifest.
+
+    This is the restore payload the fabric's ``RestoreCostModel`` prices:
+    bringing a model up on a fresh node means streaming these bytes from
+    checkpoint storage before the node can serve.
+    """
+    tag = f"ckpt_{step}" if step is not None else "ckpt"
+    with open(os.path.join(directory, tag + ".json")) as f:
+        manifest = json.load(f)
+    return sum(entry_nbytes(e) for e in manifest["entries"])
+
+
 def load_checkpoint(directory: str, like, step: int | None = None):
     """Load into the structure of ``like`` (shapes/dtypes must match)."""
     tag = f"ckpt_{step}" if step is not None else "ckpt"

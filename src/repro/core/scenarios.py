@@ -423,6 +423,143 @@ def drift_failure_scenario(n_nodes: int,
 
 
 # ---------------------------------------------------------------------------
+# autoscaling scenarios (ISSUE 10): fleet-*size* pressure, not just mix
+# drift.  Diurnal cycles, flash crowds, and correlated zone-failure +
+# crowd storms — the shapes where reacting to observed load is too late
+# and forecast-driven pre-warming pays.  Pure descriptions as always;
+# the zone-failure generator additionally returns the FaultPlan the
+# chaos loop injects.
+# ---------------------------------------------------------------------------
+
+def diurnal_scenario(n_nodes: int,
+                     models: tuple[str, ...] = PAPER_MODELS,
+                     horizon_s: float = 64.0,
+                     n_phases: int = 8,
+                     low_util: float = 0.35,
+                     peak_util: float = 0.95,
+                     skew: float = 1.1,
+                     priority_mix: tuple[tuple[int, float], ...]
+                     = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """Two regions' day/night cycles sharing one fleet, half a cycle apart.
+
+    The model vocab splits into two "regions" (front half / back half)
+    whose aggregate loads follow one sinusoidal day each, offset by half
+    a cycle — when region A peaks at ``peak_util`` of ``n_nodes``-worth
+    of its share, region B is at ``low_util``.  A fixed fleet must be
+    sized for the *sum of peaks*; an autoscaler can ride the wave.  The
+    cycle is sampled into ``n_phases`` step segments (``rate_phases``).
+    """
+    half = (len(models) + 1) // 2
+    region_a, region_b = models[:half], models[half:]
+    mid = 0.5 * (low_util + peak_util)
+    amp = 0.5 * (peak_util - low_util)
+
+    def mix(frac: float) -> dict[str, float]:
+        ua = mid + amp * math.sin(2.0 * math.pi * frac)
+        ub = mid + amp * math.sin(2.0 * math.pi * frac + math.pi)
+        out = zipf_model_rates(
+            region_a, ua * n_nodes * len(region_a) / len(models), skew)
+        if region_b:
+            out.update(zipf_model_rates(
+                region_b, ub * n_nodes * len(region_b) / len(models),
+                skew))
+        return out
+
+    phases = tuple((k * horizon_s / n_phases, mix(k / n_phases))
+                   for k in range(1, n_phases))
+    return FabricScenario(
+        name=f"diurnal-{n_nodes}n", n_nodes=n_nodes, rates=mix(0.0),
+        priority_mix=priority_mix, rate_phases=phases)
+
+
+def flash_crowd_scenario(n_nodes: int,
+                         crowd_model: str = "vgg",
+                         models: tuple[str, ...] = PAPER_MODELS,
+                         horizon_s: float = 40.0,
+                         t0_s: float = 12.0,
+                         ramp_s: float = 4.0,
+                         t1_s: float = 30.0,
+                         base_util: float = 0.55,
+                         crowd_units: float | None = None,
+                         crowd_frac_start: float = 0.4,
+                         cold_frac: float = 0.02,
+                         skew: float = 1.1,
+                         priority_mix: tuple[tuple[int, float], ...]
+                         = DEFAULT_PRIORITY_MIX) -> FabricScenario:
+    """Flash crowd on a (nearly) cold model: zero→ramp→peak→gone.
+
+    The fleet serves a steady Zipf base mix at ``base_util`` of
+    ``n_nodes`` capacity units, with ``crowd_model`` at only a
+    ``cold_frac`` trickle of its coming peak.  At ``t0_s`` the crowd
+    arrives at ``crowd_frac_start`` of its peak, ramps to the full
+    ``crowd_units`` node-capacity units of extra load by
+    ``t0_s + ramp_s``, and vanishes at ``t1_s``.  ``cold_frac=0`` makes
+    the crowd model *fully* cold before ``t0_s`` — the first-seen-model
+    forecasting case (``predict_target`` cold-start trend seeding) —
+    at the price of un-provisioned dispatch while it has no home.
+    """
+    if crowd_model not in models:
+        raise ValueError(f"crowd model {crowd_model!r} not in {models}")
+    base_models = tuple(m for m in models if m != crowd_model)
+    base = zipf_model_rates(base_models, base_util * n_nodes, skew)
+    if crowd_units is None:
+        crowd_units = 0.9 * n_nodes
+    ref = SWEEP_NODE_RATES.get(
+        crowd_model, sum(SWEEP_NODE_RATES.values()) / len(SWEEP_NODE_RATES))
+    crowd_rate = crowd_units * len(SWEEP_NODE_RATES) * ref
+    rates0 = dict(base)
+    if cold_frac > 0.0:
+        rates0[crowd_model] = cold_frac * crowd_rate
+    phases = (
+        (t0_s, {**base, crowd_model: crowd_frac_start * crowd_rate}),
+        (t0_s + ramp_s, {**base, crowd_model: crowd_rate}),
+        (t1_s, dict(rates0)),
+    )
+    return FabricScenario(
+        name=f"flash-crowd-{n_nodes}n", n_nodes=n_nodes, rates=rates0,
+        priority_mix=priority_mix, rate_phases=phases)
+
+
+def zone_failure_crowd_scenario(n_nodes: int,
+                                zone: tuple[int, ...] = (0,),
+                                fail_at_s: float | None = None,
+                                net_window_s: float = 4.0,
+                                net_extra_ms: float = 3.0,
+                                net_loss: float = 0.05,
+                                seed: int = 0,
+                                **crowd_kwargs):
+    """Correlated zone failure + flash crowd: the worst hour on call.
+
+    The availability zone ``zone`` (a node-id tuple) permanently crashes
+    right as the flash crowd hits full strength (default: the end of the
+    ramp), under a degraded lossy network — the correlated-failure shape
+    where lost capacity and spiking demand compound.  Returns
+    ``(scenario, fault_plan)``: the scenario drives trace + fleet
+    construction, the plan goes into ``FabricConfig.faults`` so the
+    chaos loop injects (and the health detector must *detect*) the zone
+    loss.
+    """
+    from repro.faults import (FaultPlan, NetworkDegradation,
+                              PermanentCrash)
+    scn = flash_crowd_scenario(n_nodes, **crowd_kwargs)
+    bad = [i for i in zone if not 0 <= i < n_nodes]
+    if bad:
+        raise ValueError(f"zone names node(s) {bad}; "
+                         f"fleet has nodes 0..{n_nodes - 1}")
+    if fail_at_s is None:
+        fail_at_s = crowd_kwargs.get("t0_s", 12.0) \
+            + crowd_kwargs.get("ramp_s", 4.0)
+    t_fail = fail_at_s * 1e3
+    faults = tuple(PermanentCrash(node_id=int(i), t_ms=t_fail)
+                   for i in sorted(set(zone)))
+    faults += (NetworkDegradation(
+        t0_ms=t_fail, t1_ms=t_fail + net_window_s * 1e3,
+        extra_ms=net_extra_ms, loss_prob=net_loss),)
+    scn = dataclasses.replace(scn, name=f"zone-crowd-{n_nodes}n")
+    return scn, FaultPlan(faults, seed=seed)
+
+
+# ---------------------------------------------------------------------------
 # compound-inference (DAG) scenarios (ROADMAP "requests as model DAGs"):
 # a client request is a task graph over several models with ONE end-to-end
 # SLO — e.g. frontend -> detector -> per-region classifier fan-out ->

@@ -5,6 +5,8 @@ event-heap engine + optional rescheduling controller); a global router
 dispatches the client trace across nodes under a pluggable policy, with
 priority classes, preemption, and a network delay model layered on top.
 """
+from repro.fabric.autoscaler import (DEFAULT_MODEL_BYTES, FleetAutoscaler,
+                                     RestoreCostModel, ScaleEvent)
 from repro.fabric.fabric import FabricConfig, FabricMetrics, ServingFabric
 from repro.faults import (FaultPlan, HealthDetector, HealthParams,
                           NetworkDegradation, PermanentCrash, RetryPolicy,
@@ -23,12 +25,14 @@ from repro.fabric.workload import (build_dag_fabric, build_dag_trace_soa,
                                    build_trace_soa, stream_occupancies)
 
 __all__ = [
-    "BRONZE", "DispatchStats", "FabricConfig", "FabricMetrics",
-    "FabricNode", "FabricRouter", "FaultPlan", "GOLD", "GlobalScheduler",
+    "BRONZE", "DEFAULT_MODEL_BYTES", "DispatchStats", "FabricConfig",
+    "FabricMetrics", "FabricNode", "FabricRouter", "FaultPlan",
+    "FleetAutoscaler", "GOLD", "GlobalScheduler",
     "HealthDetector", "HealthParams", "MigrationEvent", "NetworkDegradation",
     "NetworkModel", "NodeSpec", "NodeUpdate", "PermanentCrash",
-    "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "RetryPolicy",
-    "SILVER", "ServingFabric", "StragglerWindow", "TransientCrash",
+    "POLICIES", "PRIORITY_CLASSES", "PriorityClass", "RestoreCostModel",
+    "RetryPolicy", "SILVER", "ScaleEvent", "ServingFabric",
+    "StragglerWindow", "TransientCrash",
     "assign_priorities", "build_dag_fabric", "build_dag_trace_soa",
     "build_fabric", "build_stream_fabric", "build_stream_trace_soa",
     "build_trace", "build_trace_soa", "chaos_plan", "draw_priorities",

@@ -99,6 +99,28 @@ class FabricConfig:
     migration_patience: int = 2
     #: router->new-home lag charged to requests a donor hands back
     handback_ms: float = 5.0
+    # ---- fleet autoscaling (predictive pre-warming) ----
+    #: enable the fleet-size epoch subscriber.  Off by default: an
+    #: autoscaling-blind fabric replays every earlier golden byte-
+    #: identically.  Decisions land on the migration-epoch grid
+    #: (``migration_period_ms``), with or without migrations enabled.
+    autoscale: bool = False
+    #: "predictive" pre-warms ahead of the forecast trend; "reactive"
+    #: zeroes the trend and scales on observed load only (contrast arm)
+    autoscale_mode: str = "predictive"
+    autoscale_min_nodes: int = 1
+    autoscale_max_nodes: int = 16
+    #: utilization headroom: fleet sized so the forecast fits in this
+    #: fraction of the smallest schedulable node count
+    autoscale_target_util: float = 0.75
+    autoscale_max_add_per_epoch: int = 2
+    #: consecutive over-provisioned epochs before one node drains
+    autoscale_down_patience: int = 2
+    #: checkpoint-restore warm-up pricing (a
+    #: :class:`~repro.fabric.autoscaler.RestoreCostModel`): spawn and
+    #: migration warm-ups are charged per model as bytes over storage
+    #: bandwidth.  ``None`` keeps the flat ``migration_warmup_ms``.
+    restore: object | None = None
     # ---- task-graph (DAG) serving ----
     #: release-frontier cadence for staged traces: nodes advance in
     #: segments of this length, and stage completions observed at each
@@ -174,6 +196,12 @@ class FabricMetrics:
     #: chaos-serving diagnostics (retry/detector/brownout counters and
     #: event logs); ``None`` on the legacy serving paths
     chaos: dict | None = None
+    #: applied fleet-size deltas (autoscaler joins/drains), in decision
+    #: order; empty when autoscaling is off or never fired
+    scale_events: list = dataclasses.field(default_factory=list)
+    #: node-seconds of provisioned capacity (autoscaling runs only;
+    #: None otherwise) — the goodput-per-node-hour denominator
+    node_seconds: float | None = None
 
     @property
     def migrations(self) -> int:
@@ -224,6 +252,15 @@ class ServingFabric:
             raise ValueError(
                 "FabricConfig.migrations and per-node controllers "
                 "(period_s) cannot be combined yet")
+        if self.cfg.autoscale and self.cfg.period_s is not None:
+            raise ValueError(
+                "FabricConfig.autoscale and per-node controllers "
+                "(period_s) cannot be combined yet — a node controller "
+                "cannot reschedule a fleet whose membership changes")
+        if self.cfg.autoscale and self.cfg.migration_period_ms <= 0:
+            raise ValueError(
+                "FabricConfig.autoscale needs a positive "
+                "migration_period_ms (the shared epoch grid)")
         self.nodes = list(nodes)
         self._served = False
         #: applied placement deltas (filled by the migration epoch loop)
@@ -234,6 +271,8 @@ class ServingFabric:
         #: reset and replayed k times
         self.replayed_ids: list[np.ndarray] = []
         self.global_scheduler = None
+        #: injection seam: tests may pre-set a (scripted) FleetAutoscaler
+        self.autoscaler = None
         self.router = FabricRouter(
             self.nodes, policy=self.cfg.policy, network=self.cfg.network,
             shed_backlog_ms=self.cfg.shed_backlog_ms,
@@ -384,6 +423,10 @@ class ServingFabric:
         if plan is not None and not plan.is_empty:
             return self._serve_chaos(trace)
         if trace.has_stages:
+            if self.cfg.autoscale:
+                raise ValueError(
+                    "staged (DAG) traces cannot be autoscaled yet — the "
+                    "release-frontier loop assumes a fixed fleet")
             return self._serve_dag(trace)
         if trace.has_streams:
             # the node engines refuse these combinations too (a mid-run
@@ -394,12 +437,17 @@ class ServingFabric:
                     "streaming traces cannot be combined with migrations "
                     "yet — a migration cut cannot carry a node's live "
                     "decode pools to the model's new home")
+            if self.cfg.autoscale:
+                raise ValueError(
+                    "streaming traces cannot be autoscaled yet — a "
+                    "drain cut cannot carry a node's live decode pools")
             if self.cfg.period_s is not None:
                 raise ValueError(
                     "streaming traces cannot drive per-node controllers "
                     "(period_s) yet — a reorg cut would strand live "
                     "decode pools")
-        if self.cfg.migrations and self.cfg.migration_period_ms > 0:
+        if (self.cfg.migrations or self.cfg.autoscale) \
+                and self.cfg.migration_period_ms > 0:
             self._dispatch_with_migrations(trace)
         else:
             self.router.dispatch(trace)
@@ -438,10 +486,19 @@ class ServingFabric:
                     if n.metrics is not None}
         preemptions = sum(n.engine.preemptions if n.engine is not None
                           else n.preemptions for n in self.nodes)
+        scale_events, node_seconds = self._scale_summary()
         return FabricMetrics(fleet=fleet, per_node=per_node,
                              stats=self.router.stats,
                              preemptions=preemptions,
-                             migration_events=list(self.migration_events))
+                             migration_events=list(self.migration_events),
+                             scale_events=scale_events,
+                             node_seconds=node_seconds)
+
+    def _scale_summary(self) -> tuple[list, float | None]:
+        auto = self.autoscaler
+        if auto is None:
+            return [], None
+        return list(auto.events), auto.node_seconds(self.cfg.horizon_ms)
 
     def _replay(self, trace: RequestTrace, lost: np.ndarray,
                 t_floor_ms: float, lag_ms: float,
@@ -569,6 +626,11 @@ class ServingFabric:
                 gs = self.global_scheduler = GlobalScheduler(
                     self.profiles, self.nodes, cfg)
             gs.health = det
+        auto = self._make_autoscaler()
+        if auto is not None:
+            auto.health = det
+        if (gs is not None or auto is not None) \
+                and cfg.migration_period_ms > 0:
             k = 1
             while k * cfg.migration_period_ms < horizon - 1e-9:
                 mig_bounds.add(k * cfg.migration_period_ms)
@@ -600,7 +662,7 @@ class ServingFabric:
                 ids = self._brownout_admit(trace, ids, brown)
             if len(ids):
                 router.dispatch(trace, ids)
-                if gs is not None:
+                if gs is not None or auto is not None:
                     mig_counts += np.bincount(trace.model_id[ids],
                                               minlength=nm)
             for node in self.nodes:
@@ -662,8 +724,8 @@ class ServingFabric:
                                  handback=True)
                     for nd in self.nodes:
                         nd.feed_pending()
-            # -- migration decision at migration-period boundaries --
-            if gs is not None and t1 in mig_bounds:
+            # -- fleet-size + migration decisions at period boundaries --
+            if (gs is not None or auto is not None) and t1 in mig_bounds:
                 span_s = max((t1 - last_mig) / 1e3, 1e-9)
                 demand = {trace.models[m]: c / span_s
                           for m, c in enumerate(mig_counts.tolist())
@@ -683,24 +745,32 @@ class ServingFabric:
                              for m, c in enumerate(nc.tolist()) if c})
                     else:
                         node_obs.append({})
-                # index over the same live set gs.on_epoch filters to
-                live = [j for j, n in enumerate(self.nodes)
-                        if n.alive_at(t1)
-                        and (det is None or det.routable(n.node_id, t1))]
-                backlogs = router.backlogs(t1)
-                ob = trace.obs
-                for u in gs.on_epoch(t1, demand,
-                                     [node_obs[j] for j in live],
-                                     [backlogs[j] for j in live],
-                                     horizon - t1):
-                    nd = self.nodes[u.node_id]
-                    nd.apply_update(u.t_cut_ms, u.t_apply_ms, u.schedule,
-                                    u.added, u.removed)
-                    nd.engine.apply_schedule_at(u.t_apply_ms, u.schedule)
-                    if ob is not None:
-                        ob.fleet_log.append(
-                            ("migration", u.t_cut_ms, u.node_id,
-                             len(u.added), len(u.removed)))
+                if auto is not None:
+                    self._autoscale_epoch(trace, auto, t1, demand,
+                                          node_obs, pend_len,
+                                          horizon - t1, det=det,
+                                          chaos=True)
+                if gs is not None:
+                    # index over the same live set gs.on_epoch filters to
+                    live = [j for j, n in enumerate(self.nodes)
+                            if n.alive_at(t1) and not n.draining
+                            and (det is None
+                                 or det.routable(n.node_id, t1))]
+                    backlogs = router.backlogs(t1)
+                    ob = trace.obs
+                    for u in gs.on_epoch(t1, demand,
+                                         [node_obs[j] for j in live],
+                                         [backlogs[j] for j in live],
+                                         horizon - t1):
+                        nd = self.nodes[u.node_id]
+                        nd.apply_update(u.t_cut_ms, u.t_apply_ms,
+                                        u.schedule, u.added, u.removed)
+                        nd.engine.apply_schedule_at(u.t_apply_ms,
+                                                    u.schedule)
+                        if ob is not None:
+                            ob.fleet_log.append(
+                                ("migration", u.t_cut_ms, u.node_id,
+                                 len(u.added), len(u.removed)))
                 last_mig = t1
             t_prev = t1
         # ---- post-horizon drain: replay until the fleet runs dry ----
@@ -753,11 +823,13 @@ class ServingFabric:
             "detector": det.summary() if det is not None else None,
             "brownout": brown.summary() if brown is not None else None,
         }
+        scale_events, node_seconds = self._scale_summary()
         return FabricMetrics(fleet=fleet, per_node=per_node,
                              stats=router.stats,
                              preemptions=preemptions,
                              migration_events=list(self.migration_events),
-                             chaos=chaos)
+                             chaos=chaos, scale_events=scale_events,
+                             node_seconds=node_seconds)
 
     @staticmethod
     def _node_ok(node: FabricNode, t0: float, t1: float) -> int:
@@ -1030,23 +1102,29 @@ class ServingFabric:
         """Route the trace epoch by epoch, migrating placement between.
 
         Each migration epoch is dispatched under the placement in force
-        at its start; at every boundary the fleet-level
-        :class:`~repro.fabric.global_scheduler.GlobalScheduler` sees what
-        the router could causally observe over the closing epoch (fleet
-        arrival rates, per-node dispatch rates, fluid backlogs) and may
-        answer with a bounded placement delta, which lands before the
-        next epoch routes.  Epoch membership is fixed by *client* arrival
-        time, snapshotted before dispatch shifts arrivals by network
-        delay.
+        at its start; at every boundary the fleet-level subscribers see
+        what the router could causally observe over the closing epoch
+        (fleet arrival rates, per-node dispatch rates, fluid backlogs)
+        and may answer with a bounded delta that lands before the next
+        epoch routes.  The :class:`~repro.fabric.autoscaler.FleetAutoscaler`
+        decides first (fleet size), then the
+        :class:`~repro.fabric.global_scheduler.GlobalScheduler`
+        (placement) — a freshly-spawned pre-warming node is immediately
+        visible as a migration receiver.  Epoch membership is fixed by
+        *client* arrival time, snapshotted before dispatch shifts
+        arrivals by network delay.
         """
-        from repro.fabric.global_scheduler import GlobalScheduler
         cfg = self.cfg
-        # injection seam: tests/experiments may pre-set a (scripted)
-        # fleet controller; anything with on_epoch(...) and .events works
-        gs = self.global_scheduler
-        if gs is None:
-            gs = self.global_scheduler = GlobalScheduler(
-                self.profiles, self.nodes, cfg)
+        # injection seams: tests/experiments may pre-set (scripted)
+        # fleet controllers; anything with on_epoch(...) + .events works
+        gs = None
+        if cfg.migrations:
+            from repro.fabric.global_scheduler import GlobalScheduler
+            gs = self.global_scheduler
+            if gs is None:
+                gs = self.global_scheduler = GlobalScheduler(
+                    self.profiles, self.nodes, cfg)
+        auto = self._make_autoscaler()
         period = cfg.migration_period_ms
         horizon = cfg.horizon_ms
         n_epochs = max(1, int(np.ceil(horizon / period - 1e-9)))
@@ -1085,15 +1163,20 @@ class ServingFabric:
                                      if c})
                 else:
                     node_obs.append({})
-            # GlobalScheduler indexes node_obs/backlogs over *live* nodes
-            live_obs = [node_obs[j] for j, n in enumerate(self.nodes)
-                        if n.alive_at(t1)]
+            if auto is not None:
+                self._autoscale_epoch(trace, auto, t1, demand, node_obs,
+                                      pend_len, horizon - t1)
+            if gs is None:
+                continue
+            # GlobalScheduler indexes node_obs/backlogs over *live*
+            # non-draining nodes (the same filter it applies internally)
+            live = [j for j, n in enumerate(self.nodes)
+                    if n.alive_at(t1) and not n.draining]
             backlogs = self.router.backlogs(t1)
-            live_backlogs = [backlogs[j]
-                             for j, n in enumerate(self.nodes)
-                             if n.alive_at(t1)]
             ob = trace.obs
-            for u in gs.on_epoch(t1, demand, live_obs, live_backlogs,
+            for u in gs.on_epoch(t1, demand,
+                                 [node_obs[j] for j in live],
+                                 [backlogs[j] for j in live],
                                  horizon - t1):
                 self.nodes[u.node_id].apply_update(
                     u.t_cut_ms, u.t_apply_ms, u.schedule, u.added,
@@ -1102,7 +1185,57 @@ class ServingFabric:
                     ob.fleet_log.append(
                         ("migration", u.t_cut_ms, u.node_id,
                          len(u.added), len(u.removed)))
-        self.migration_events = list(gs.events)
+        if gs is not None:
+            self.migration_events = list(gs.events)
+
+    def _make_autoscaler(self):
+        """Build (or reuse the injected) fleet autoscaler when enabled."""
+        if not self.cfg.autoscale:
+            return None
+        auto = self.autoscaler
+        if auto is None:
+            from repro.fabric.autoscaler import FleetAutoscaler
+            auto = self.autoscaler = FleetAutoscaler(
+                self.profiles, self.nodes, self.cfg)
+        return auto
+
+    def _autoscale_epoch(self, trace: RequestTrace, auto, t1: float,
+                         demand: dict, node_obs: list,
+                         pend_len: list, remaining_ms: float,
+                         det=None, chaos: bool = False) -> None:
+        """Land one autoscale decision and wire its deltas into the run.
+
+        Joins are appended to the live node list and registered with the
+        router (and, on the chaos path, the health detector + an
+        incremental engine); the positional epoch-state lists grow in
+        lockstep.  Drains were already staged on the victim by the
+        autoscaler (donor protocol); the chaos path additionally stages
+        the empty partitioning on the victim's live engine.
+        """
+        added, drained = auto.on_epoch(t1, demand, node_obs, remaining_ms)
+        ob = trace.obs
+        for node in added:
+            node.trace = trace
+            self.nodes.append(node)
+            self.router.add_node(node)
+            node_obs.append({})
+            pend_len.append(0)
+            if det is not None:
+                det.add_node(node.node_id)
+            if chaos:
+                node.begin_stream()
+            if ob is not None:
+                ob.fleet_log.append(
+                    ("scale", t1, node.node_id, "add",
+                     node.model_active_ms.get(
+                         next(iter(node.rate_by_model), ""), t1)))
+        for node in drained:
+            if chaos and node.engine is not None:
+                t_apply, sched = node.schedule_plan[-1]
+                node.engine.apply_schedule_at(t_apply, sched)
+            if ob is not None:
+                ob.fleet_log.append(
+                    ("scale", t1, node.node_id, "drain", t1))
 
     def _run_donors(self, trace: RequestTrace) -> None:
         """Run donor nodes first and hand their stranded requests back.

@@ -23,7 +23,10 @@ surface as hand-backs the fabric replays to the model's new homes).
 
 ``t_apply_ms = t_cut_ms + warmup`` — the instant the node's new
 partitioning goes live.  ``warmup`` models the receiver's weight
-load/warm-up charge (``migration_warmup_ms`` plus seeded uniform jitter);
+load/warm-up charge: checkpoint-restore-priced per model when
+``cfg.restore`` carries a :class:`~repro.fabric.autoscaler.RestoreCostModel`
+(model bytes over storage bandwidth), else the flat
+``migration_warmup_ms`` constant — plus seeded uniform jitter either way;
 a freshly-migrated-in model is not *routable* until this cut, so its
 previous homes keep absorbing the traffic while the receiver loads.
 Pure re-rates (growing/shrinking a model the node already serves) are
@@ -94,7 +97,10 @@ class GlobalScheduler:
     def __init__(self, profiles, nodes: Sequence, cfg,
                  scheduler_factory=None):
         self.profiles = dict(profiles)
-        self.nodes = list(nodes)
+        # hold the *live* node list when given one: the fabric's
+        # autoscaler grows/shrinks it mid-run and freshly-joined nodes
+        # must be visible as migration receivers at the next epoch
+        self.nodes = nodes if isinstance(nodes, list) else list(nodes)
         self.cfg = cfg
         if scheduler_factory is None:
             def scheduler_factory(profs, cluster):
@@ -129,8 +135,20 @@ class GlobalScheduler:
                 self.profiles, node.spec.cluster)
         return s
 
-    def _warmup_ms(self) -> float:
-        w = self.cfg.migration_warmup_ms
+    def _warmup_ms(self, models: Sequence[str] = ()) -> float:
+        """Warm-up charge for bringing ``models`` up on a receiver.
+
+        With ``cfg.restore`` set (a :class:`RestoreCostModel`), the charge
+        is priced from first principles — checkpoint bytes over storage
+        bandwidth per model — otherwise the flat ``migration_warmup_ms``
+        constant.  The seeded jitter draw happens unconditionally so the
+        rng stream (and the jittered goldens) is independent of pricing.
+        """
+        restore = getattr(self.cfg, "restore", None)
+        if restore is not None and models:
+            w = restore.warmup_ms(models)
+        else:
+            w = self.cfg.migration_warmup_ms
         j = self.cfg.migration_warmup_jitter_ms
         if j > 0.0:
             w += float(self._rng.uniform(0.0, j))
@@ -167,10 +185,11 @@ class GlobalScheduler:
         target = predict_target(ewma, demand, self._prev_obs)
         self._prev_obs = dict(demand)
         live = [n for n in self.nodes if n.alive_at(t_ms)
+                and not n.draining
                 and (self.health is None
                      or self.health.routable(n.node_id, t_ms))]
-        if not live or remaining_ms < 2.0 * cfg.migration_warmup_ms:
-            return []   # nothing to place on / warm-up cannot pay back
+        if not live:
+            return []   # nothing to place on
         prov = self._fleet_provisioned(live)
         starving = {}
         for m, want in target.items():
@@ -228,8 +247,15 @@ class GlobalScheduler:
                 if grown is None:
                     continue
                 trial, res, took = grown
-                warm = self._warmup_ms()
+                warm = self._warmup_ms((m,) if already <= _EPS_RATE else ())
                 added = {} if already > _EPS_RATE else {m: took}
+                # payback gate on the *actual* sampled/priced warm-up for
+                # this candidate — the old epoch-global guard compared
+                # the flat constant and undercharged jittered or
+                # restore-priced placements near the horizon end.  Pure
+                # re-rates are free and always allowed.
+                if added and remaining_ms < 2.0 * warm:
+                    continue
                 # a pure re-rate applies at the cut; a genuinely new model
                 # pays the seeded warm-up before its traffic retargets
                 t_apply = t_ms + (warm if added else 0.0)

@@ -78,6 +78,10 @@ class FabricNode:
         #: set by the fabric once this node has executed (failed nodes run
         #: first); the router must not dispatch anything more to it.
         self.retired = False
+        #: set by the fleet autoscaler when this node is draining toward
+        #: retirement: it serves out what it holds but is no longer
+        #: capacity — not a migration receiver, not a drain victim twice
+        self.draining = False
         #: pending_idx watermark for the incremental (DAG) feed
         self._fed = 0
         # router-visible load signals, derived from the partitioning

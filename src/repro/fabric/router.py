@@ -211,6 +211,19 @@ class FabricRouter:
         #: transit; the fabric drains this each chaos epoch
         self.in_transit_lost: list[tuple[int, float, int]] = []
 
+    # ---- fleet membership -------------------------------------------------
+
+    def add_node(self, node: FabricNode) -> None:
+        """Register a freshly-joined (autoscaled) node.
+
+        The node starts with an empty fluid backlog; positional state
+        (``_loads``) appends, so backlog snapshots stay index-aligned
+        with the fabric's node list.
+        """
+        ld = _NodeLoad(node)
+        self._loads.append(ld)
+        self._load_by_node_id[node.node_id] = ld
+
     # ---- dispatch entry ---------------------------------------------------
 
     def backlogs(self, t_ms: float) -> list[float]:
@@ -458,7 +471,11 @@ class FabricRouter:
         cands = [ld for ld in self._loads
                  if ld.node.alive_at(t_ms) and ld.node.serves(model, t_ms)]
         if not cands:  # nobody provisioned for the model: any live node
-            cands = [ld for ld in self._loads if ld.node.alive_at(t_ms)]
+            # (a node draining toward retirement is a last resort — it
+            # would only hand the request straight back)
+            cands = [ld for ld in self._loads
+                     if ld.node.alive_at(t_ms) and not ld.node.draining] \
+                or [ld for ld in self._loads if ld.node.alive_at(t_ms)]
         return cands
 
     def _choose(self, model: str, cands: list[_NodeLoad],

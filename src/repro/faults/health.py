@@ -62,6 +62,19 @@ class HealthDetector:
         #: (t_ms, node_id, transition) log, surfaced in FabricMetrics.chaos
         self.events: list[tuple[float, int, str]] = []
 
+    def add_node(self, node_id: int) -> None:
+        """Register a freshly-joined (autoscaled) node, clean slate.
+
+        Idempotent: re-registering a known node keeps its history — a
+        node that earned an eviction does not launder it by re-joining.
+        """
+        node_id = int(node_id)
+        if node_id in self.score:
+            return
+        self.score[node_id] = 0.0
+        self.state[node_id] = HEALTHY
+        self.evicted_at[node_id] = None
+
     # -- evidence ----------------------------------------------------------
     def observe(self, node_id: int, t_ms: float,
                 ok: int, failed: int) -> None:

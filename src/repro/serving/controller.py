@@ -62,6 +62,12 @@ class EWMARateTracker:
                 self.rates[m] = self.alpha * r + (1 - self.alpha) * self.rates[m]
             else:
                 self.rates[m] = r
+            # explicit zero observations must drain like absences: an
+            # engine that reports {m: 0.0} every window would otherwise
+            # pin a dead model's entry at 0.0 forever and scale-down
+            # decisions keyed on "tracked models" would never release it.
+            if self.rates[m] < self.NOISE_FLOOR:
+                del self.rates[m]
         return dict(self.rates)
 
 
@@ -85,7 +91,16 @@ def predict_target(ewma: Mapping[str, float],
     out = {}
     for m, r in ewma.items():
         obs = observed.get(m, r)
-        trend = max(0.0, obs - prev_obs.get(m, obs))
+        # A model first seen *this* window (absent from a real previous
+        # window) grew from zero within the window: seed the trend from
+        # that within-window growth instead of defaulting prev to obs
+        # (zero trend), which made a flash crowd on a cold model
+        # extrapolate one window late.  When there is no previous window
+        # at all (very first tick) every model is "first seen" and the
+        # within-window growth is unknowable — keep the zero-trend
+        # default rather than inflate the deployment-time estimate.
+        prev = prev_obs.get(m, 0.0 if prev_obs else obs)
+        trend = max(0.0, obs - prev)
         out[m] = max(r, obs + trend_windows * trend) * margin
     return {m: r for m, r in out.items() if r > 0}
 

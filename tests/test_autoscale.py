@@ -1,0 +1,382 @@
+"""Fleet autoscaling suite: predictive scale-out/in (ISSUE 10).
+
+The load-bearing invariants of forecast-driven fleet sizing:
+
+  * **Conservation across scale cuts** — adding and draining nodes
+    mid-run never double-serves or loses a request: one terminal status
+    each, totals add up, the dispatch-slice multiset audit holds.
+  * **Restore-cost pricing** — a joining node's warm-up is the real
+    checkpoint-restore payload (model bytes / storage bandwidth), both
+    from the paper catalog and from on-disk ``save_checkpoint``
+    manifests, and the payback guard refuses spend that cannot amortize
+    before the horizon.
+  * **Forecast seams** — ``predict_target`` seeds a first-seen model's
+    trend from its within-window growth (the cold-start flash crowd),
+    and the EWMA tracker decays observed-zero models off its books so
+    scale-down can actually fire once a crowd leaves.
+  * **Autoscaling off == PR-9** — with the autoscale knobs present but
+    disabled, the SoA goldens replay byte-identically (including the
+    jitter-seeded migration case: restore pricing must not perturb the
+    scheduler's rng draw order).
+  * **Composed chaos** — the autoscaler grows the fleet through a storm
+    in which the health detector is simultaneously evicting a crashed
+    zone, without breaking conservation.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from soa_scenarios import _fabric_cases, fabric_record
+from test_migration import _audit_single_serve
+from repro.core import calibrate_profiles
+from repro.core.scenarios import (diurnal_scenario, flash_crowd_scenario,
+                                  zone_failure_crowd_scenario)
+from repro.fabric import (DEFAULT_MODEL_BYTES, FabricConfig, FleetAutoscaler,
+                          RestoreCostModel, build_fabric, build_trace,
+                          build_trace_soa)
+from repro.serving.controller import EWMARateTracker, predict_target
+from repro.simulator.trace import PENDING
+
+PROFS = calibrate_profiles()
+
+GOLDENS = json.load(open(os.path.join(
+    os.path.dirname(__file__), "goldens", "soa_metrics.json")))
+
+
+def _auto_cfg(n_nodes, mode="predictive", **kw) -> FabricConfig:
+    base = dict(preemption=True, migrations=True,
+                migration_period_ms=2_000.0, max_migrations_per_epoch=3,
+                autoscale=True, autoscale_mode=mode,
+                autoscale_min_nodes=n_nodes,
+                autoscale_max_nodes=4 * n_nodes,
+                restore=RestoreCostModel.paper_default())
+    base.update(kw)
+    return FabricConfig(**base)
+
+
+def _flash(n_nodes, horizon_s, **kw):
+    """A crowd the starting fleet genuinely cannot host (sized against
+    solver capacity, ~1.6k vgg req/s per 4-GPU node)."""
+    kw.setdefault("crowd_units", 9.0 * n_nodes)
+    kw.setdefault("t0_s", 0.30 * horizon_s)
+    kw.setdefault("ramp_s", 0.10 * horizon_s)
+    kw.setdefault("t1_s", 0.75 * horizon_s)
+    return flash_crowd_scenario(n_nodes, horizon_s=horizon_s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# restore-cost model: bytes / bandwidth, catalog and manifests
+# ---------------------------------------------------------------------------
+
+def test_restore_cost_prices_bytes_over_bandwidth():
+    rc = RestoreCostModel.paper_default(read_gbps=2.0, base_ms=150.0)
+    vgg_le = 150.0 + (DEFAULT_MODEL_BYTES["vgg"]
+                      + DEFAULT_MODEL_BYTES["le"]) / 2.0e9 * 1e3
+    assert rc.warmup_ms(("vgg", "le")) == pytest.approx(vgg_le)
+    # restore is sequential over the shared storage link: supersets
+    # strictly cost more, and the big model dominates the small one
+    assert rc.warmup_ms(("vgg",)) > rc.warmup_ms(("le",))
+    assert rc.warmup_ms(("vgg", "le")) > rc.warmup_ms(("vgg",))
+    assert rc.warmup_ms(()) == pytest.approx(150.0)
+    # unknown models fall back to a conservative default (~100MB), not
+    # zero: bigger than every small/mid model in the catalog
+    assert rc.restore_ms("mystery") > rc.restore_ms("goo")
+
+
+def test_restore_cost_from_checkpoint_manifests(tmp_path):
+    from repro.checkpoint import manifest_nbytes, save_checkpoint
+    tree = {"w": np.ones((64, 32), np.float32),
+            "b": np.zeros((32,), np.float32)}
+    d = str(tmp_path / "toy")
+    save_checkpoint(d, tree)
+    nbytes = 64 * 32 * 4 + 32 * 4
+    assert manifest_nbytes(d) == nbytes
+    rc = RestoreCostModel.from_manifests({"toy": d}, read_gbps=1.0,
+                                         base_ms=0.0)
+    assert rc.bytes_of("toy") == float(nbytes)
+    assert rc.warmup_ms(("toy",)) == pytest.approx(nbytes / 1e9 * 1e3)
+
+
+# ---------------------------------------------------------------------------
+# forecast seams: cold-start trend + observed-zero decay
+# ---------------------------------------------------------------------------
+
+def test_predict_target_seeds_cold_start_trend():
+    """A model first seen this window grew from zero *within* the
+    window: its trend is the observation itself, not zero."""
+    out = predict_target({"vgg": 100.0}, {"vgg": 100.0},
+                         prev_obs={"le": 50.0}, margin=1.0,
+                         trend_windows=1.5)
+    assert out["vgg"] == pytest.approx(100.0 + 1.5 * 100.0)
+    # known model, flat load: no trend
+    out = predict_target({"le": 50.0}, {"le": 50.0},
+                         prev_obs={"le": 50.0}, margin=1.0)
+    assert out["le"] == pytest.approx(50.0)
+
+
+def test_predict_target_first_tick_keeps_zero_trend():
+    """At the very first tick there is no previous window at all;
+    within-window growth is unknowable and must not be invented."""
+    out = predict_target({"vgg": 100.0}, {"vgg": 100.0},
+                         prev_obs={}, margin=1.0, trend_windows=1.5)
+    assert out["vgg"] == pytest.approx(100.0)
+
+
+def test_ewma_decays_observed_zero_models_off_the_books():
+    """Explicit zero observations drain a model exactly like absences:
+    without the noise-floor deletion the stale entry pins the forecast
+    (and thus the fleet) above zero forever."""
+    tr = EWMARateTracker()
+    tr.update({"vgg": 200.0, "le": 50.0})
+    for _ in range(64):
+        tr.update({"vgg": 0.0, "le": 50.0})
+    assert "vgg" not in tr.rates
+    assert tr.rates["le"] == pytest.approx(50.0)
+    # absence decays identically (the PR-2 fix this satellite guards)
+    tr2 = EWMARateTracker()
+    tr2.update({"vgg": 200.0})
+    for _ in range(64):
+        tr2.update({"le": 50.0})
+    assert "vgg" not in tr2.rates
+
+
+# ---------------------------------------------------------------------------
+# autoscaler sizing + payback guard
+# ---------------------------------------------------------------------------
+
+def _one_node_autoscaler(n_nodes=2, **cfg_kw):
+    cfg = _auto_cfg(n_nodes, **cfg_kw)
+    scn = _flash(n_nodes, 20.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    return fabric, fabric._make_autoscaler(), scn
+
+
+def test_desired_respects_bounds():
+    _fab, auto, scn = _one_node_autoscaler(2)
+    assert auto._desired({}) == 2
+    huge = {m: 1e6 for m in scn.rates}
+    assert auto._desired(huge) == auto.cfg.autoscale_max_nodes
+    tiny = {"le": 1.0}
+    assert auto._desired(tiny) == 2   # clamped to min_nodes
+
+
+def test_payback_guard_refuses_unamortizable_spawn():
+    """A node whose priced warm-up cannot pay back twice over before the
+    horizon is not built: scale-up near the end of the run is refused."""
+    _fab, auto, scn = _one_node_autoscaler(2)
+    peak = dict(scn.rate_phases[1][1])
+    added, _ = auto.on_epoch(2_000.0, peak, [{}, {}], remaining_ms=100.0)
+    assert added == []
+    added, _ = auto.on_epoch(4_000.0, peak, [{}, {}],
+                             remaining_ms=16_000.0)
+    assert added, "with a full horizon left the same demand must spawn"
+    for node in added:
+        # a joining node is future capacity, not present capacity
+        assert all(t > 4_000.0 for t in node.model_active_ms.values())
+
+
+def test_global_scheduler_payback_gate_prices_the_candidate():
+    """The migration payback guard gates on the *priced* warm-up of the
+    instance actually being grown, not a flat constant: a huge model is
+    refused where a tiny one still amortizes."""
+    from repro.core import ElasticPartitioning
+    from repro.fabric.global_scheduler import GlobalScheduler
+
+    slow = RestoreCostModel(model_bytes=dict(DEFAULT_MODEL_BYTES),
+                            read_gbps=0.05, base_ms=50.0)
+    # vgg: 528MB / 0.05GBps ~ 10.6s restore; le: ~5ms + base
+    cfg = FabricConfig(migrations=True, migration_period_ms=2_000.0,
+                       max_migrations_per_epoch=3, restore=slow,
+                       migration_warmup_jitter_ms=0.0)
+    scn = _flash(2, 20.0)
+    fabric = build_fabric(scn, PROFS, cfg)
+    gs = GlobalScheduler(PROFS, fabric.nodes, cfg)
+    assert gs._warmup_ms(("vgg",)) > 10_000.0
+    assert gs._warmup_ms(("le",)) < 100.0
+    # remaining 8s: 2*warm(vgg) > 8s is refused, 2*warm(le) passes
+    demand = {"vgg": 900.0, "le": 400.0}
+    node_obs = [{"vgg": 450.0, "le": 200.0}, {"vgg": 450.0, "le": 200.0}]
+    updates = gs.on_epoch(2_000.0, demand, node_obs, [0.0, 0.0],
+                          remaining_ms=8_000.0)
+    grown = {m for u in updates for m in u.added}
+    assert "vgg" not in grown, \
+        "a 10s restore cannot amortize inside an 8s tail"
+
+
+# ---------------------------------------------------------------------------
+# conservation across scale cuts (Hypothesis over random crowds)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_nodes=st.sampled_from([2, 3]),
+       mode=st.sampled_from(["predictive", "reactive"]),
+       cold=st.sampled_from([0.0, 0.02]))
+@settings(max_examples=6, deadline=None)
+def test_conservation_across_scale_cuts(seed, n_nodes, mode, cold):
+    """Seeded flash crowds: one terminal status each, no double-serve,
+    totals add up — while the fleet is growing and shrinking."""
+    horizon_s = 12.0
+    scn = _flash(n_nodes, horizon_s, cold_frac=cold)
+    cfg = _auto_cfg(n_nodes, mode=mode, horizon_ms=horizon_s * 1e3,
+                    migration_seed=seed)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.total == len(trace)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+    assert len(fabric.nodes) >= n_nodes
+
+
+# ---------------------------------------------------------------------------
+# scale-up lifecycle: pre-warm gating, cold-start crowds, scale-down
+# ---------------------------------------------------------------------------
+
+def _serve_flash(n_nodes=3, horizon_s=20.0, mode="predictive", seed=11,
+                 **kw):
+    scn = _flash(n_nodes, horizon_s, **kw)
+    cfg = _auto_cfg(n_nodes, mode=mode, horizon_ms=horizon_s * 1e3)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=seed)
+    fm = fabric.serve_trace(trace)
+    return scn, fabric, trace, fm
+
+
+def test_scale_up_fires_and_respects_warmup():
+    """The crowd triggers joins; a joined node takes no traffic that
+    arrived before its restore finished (routability gating)."""
+    _scn, fabric, trace, fm = _serve_flash()
+    adds = [e for e in fm.scale_events if e.action == "add"]
+    assert adds, "a 27-unit crowd on 3 nodes must scale the fleet up"
+    assert fm.node_seconds is not None and fm.node_seconds > 0
+    for e in adds:
+        assert e.t_ready_ms > e.t_ms
+        assert e.warmup_ms > 0.0
+        node = fabric.nodes[e.node_id]
+        idx = np.asarray(node.pending_idx, dtype=np.int64)
+        if idx.size:
+            assert float(trace.arrival_ms[idx].min()) >= e.t_ready_ms - 1e-6
+
+
+def test_cold_start_crowd_scales_up_predictively():
+    """crowd model fully cold before t0 (``cold_frac=0``): the
+    first-seen forecast seeding still grows the fleet."""
+    _scn, _fabric, _trace, fm = _serve_flash(cold_frac=0.0)
+    adds = [e for e in fm.scale_events if e.action == "add"]
+    assert adds, "cold-start crowd must still trigger scale-up"
+
+
+def test_scale_down_after_the_crowd_leaves():
+    """Once the crowd vanishes the decayed forecast retires capacity:
+    drains fire after t1 and drained nodes stop taking new arrivals."""
+    scn, fabric, trace, fm = _serve_flash(
+        horizon_s=24.0, t0_s=5.0, ramp_s=2.0, t1_s=12.0)
+    drains = [e for e in fm.scale_events if e.action == "drain"]
+    assert drains, "the fleet must shrink once the crowd is gone"
+    assert all(e.t_ms > 12.0 * 1e3 for e in drains)
+    for e in drains:
+        node = fabric.nodes[e.node_id]
+        assert node.draining
+        idx = np.asarray(node.pending_idx, dtype=np.int64)
+        if idx.size:
+            # backlog only: nothing arriving after the drain cut lands
+            # here (hand-backs replay elsewhere, new traffic avoids it)
+            assert float(trace.arrival_ms[idx].max()) <= e.t_ms + 1e-6
+    up = [n for n in fabric.nodes if not n.retired and not n.draining]
+    assert len(up) < len(fabric.nodes)
+    assert len(up) >= fabric.cfg.autoscale_min_nodes
+
+
+def test_reactive_arm_scales_later_than_predictive():
+    """The contrast arm is honest: zeroed trend means the first join
+    decision comes no earlier than the forecast-driven one."""
+    _s, _f, _t, fm_p = _serve_flash(mode="predictive")
+    _s, _f, _t, fm_r = _serve_flash(mode="reactive")
+    first = lambda fm: min((e.t_ms for e in fm.scale_events
+                            if e.action == "add"), default=np.inf)
+    assert first(fm_p) <= first(fm_r)
+
+
+def test_diurnal_scenario_is_well_formed():
+    scn = diurnal_scenario(4, horizon_s=32.0, n_phases=8)
+    assert len(scn.rate_phases) == 7
+    tot0 = sum(scn.rates.values())
+    assert all(sum(mix.values()) > 0 for _t, mix in scn.rate_phases)
+    # anti-phased regions: total load stays within a band, no phase
+    # doubles the fleet-wide rate even as each region swings hard
+    for _t, mix in scn.rate_phases:
+        assert 0.5 * tot0 < sum(mix.values()) < 2.0 * tot0
+
+
+# ---------------------------------------------------------------------------
+# autoscaling off == PR-9 goldens (reused, not regenerated)
+# ---------------------------------------------------------------------------
+
+def test_autoscale_knobs_off_reproduce_goldens():
+    """Carrying the autoscale knobs changes nothing while
+    ``autoscale=False``: the SoA goldens replay byte-identically.
+    ``fabric-mig-drift`` is the jitter-seeded migration case, replayed
+    with ``restore=None`` — restore pricing is an opt-in behavior change
+    for migrations, so the knob itself must stay inert."""
+    for name, restore in (("fabric-4n", RestoreCostModel.paper_default()),
+                          ("fabric-hotspot-shed",
+                           RestoreCostModel.paper_default()),
+                          ("fabric-mig-drift", None)):
+        scn, cfg, horizon_s, seed = _fabric_cases()[name]
+        cfg = dataclasses.replace(
+            cfg, autoscale=False, autoscale_mode="reactive",
+            autoscale_min_nodes=2, autoscale_max_nodes=9,
+            autoscale_target_util=0.6, autoscale_max_add_per_epoch=3,
+            autoscale_down_patience=1, restore=restore)
+        fabric = build_fabric(scn, PROFS, cfg)
+        reqs = build_trace(scn, PROFS, horizon_s, seed=seed)
+        fm = fabric.serve(reqs)
+        rec = fabric_record(reqs, fm)
+        assert rec == GOLDENS[name], f"{name} diverged with knobs present"
+
+
+def test_autoscale_run_is_deterministic():
+    a = _serve_flash(seed=5)[3]
+    b = _serve_flash(seed=5)[3]
+    assert [dataclasses.astuple(e) for e in a.scale_events] \
+        == [dataclasses.astuple(e) for e in b.scale_events]
+    assert a.fleet.completed == b.fleet.completed
+    assert a.node_seconds == pytest.approx(b.node_seconds)
+
+
+# ---------------------------------------------------------------------------
+# composed chaos: scale-up through a zone failure
+# ---------------------------------------------------------------------------
+
+def test_scale_up_through_zone_failure_storm():
+    """A zone crashes at the crowd peak while the autoscaler is mid
+    scale-out: the health detector evicts the dead node, the autoscaler
+    replaces the lost capacity, and conservation holds throughout."""
+    horizon_s = 20.0
+    scn, plan = zone_failure_crowd_scenario(
+        3, zone=(0,), horizon_s=horizon_s, crowd_units=27.0,
+        t0_s=6.0, ramp_s=2.0, t1_s=15.0)
+    cfg = _auto_cfg(3, horizon_ms=horizon_s * 1e3, faults=plan,
+                    recovery=True)
+    fabric = build_fabric(scn, PROFS, cfg)
+    trace = build_trace_soa(scn, PROFS, horizon_s, seed=11)
+    fm = fabric.serve_trace(trace)
+    assert np.all(trace.status != PENDING)
+    assert fm.fleet.completed + fm.fleet.dropped == fm.fleet.total
+    _audit_single_serve(fabric, trace)
+    adds = [e for e in fm.scale_events if e.action == "add"]
+    assert adds, "crowd + lost zone must grow the fleet"
+    assert all(e.node_id >= 3 for e in adds)
+    det = (fm.chaos or {}).get("detector", {})
+    evicted = [e for e in det.get("events", []) if e[1] == 0
+               and e[2] == "evicted"]
+    assert evicted, "the crashed zone must be health-evicted, " \
+        "not silently routed to"
+    # the detector knows the joined nodes (clean slate, no KeyErrors)
+    assert all(str(e.node_id) in det.get("final_state", {})
+               for e in adds)
